@@ -1,0 +1,50 @@
+"""§Perf roofline fractions from the dry-run JSONs.
+
+Definitions (per cell, single-pod, per-chip):
+  useful_t   = MODEL_FLOPS/chip ÷ 197 TFLOP/s   (6·N_active·D convention)
+  MFU@roofline = useful_t / max(t_compute, t_collective)
+     — the model-flops utilization an overlap-perfect schedule would hit
+       against the tighter of the compute/collective bounds. The memory
+       term is excluded from the bound on purpose: HLO "bytes accessed"
+       counts every operator's operands (no fusion accounting), so it is
+       a loose upper bound on true HBM traffic; compute and collective
+       bytes are exact per-op quantities.
+  flop_efficiency = useful_t / t_compute
+     — fraction of *executed* FLOPs that are model-useful (remat
+       recompute, MoE capacity slack, attention not in 6ND).
+
+Usage: PYTHONPATH=src python -m benchmarks.fractions
+"""
+
+import glob
+import json
+
+
+def main() -> None:
+    rows = []
+    for f in sorted(glob.glob("benchmarks/results/dryrun/*__pod16x16.json")):
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        mf = rf.get("model_flops_per_chip")
+        tc, tx = rf["t_compute_s"], rf["t_collective_s"]
+        if not mf or tc <= 0:
+            continue
+        useful_t = mf / 197e12
+        bound = max(tc, tx)
+        rows.append(
+            (r["arch"], r["shape"], useful_t, tc, tx,
+             min(useful_t / bound, 1.0) if bound else 0.0,
+             min(useful_t / tc, 1.0))
+        )
+    rows.sort(key=lambda x: -x[5])
+    print("| arch | shape | useful_t s | t_comp s | t_coll s | MFU@roofline | flop-eff |")
+    print("|---|---|---|---|---|---|---|")
+    for a, s, u, tc, tx, mfu, fe in rows:
+        print(f"| {a} | {s} | {u:.2e} | {tc:.2e} | {tx:.2e} | "
+              f"**{mfu*100:.0f}%** | {fe*100:.0f}% |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""§Perf hillclimb driver for the Steiner cells (paper-representative pair).
+
+Compiles dry-run variants of the ukw_1k / clw_10k cells and extracts the
+per-round roofline terms for each candidate change:
+
+  base        : bucket, fused f32 gather, local_steps=1, Prim MST
+  unfused     : two separate (dist, lab) gathers        [ablation]
+  lab_i16     : int16 label gather (6 B/vertex/round)
+  ls2 / ls4   : 2 / 4 local relaxations per exchange (async amortization);
+                wire bytes per *relaxation* fall by ~T
+  boruvka     : parallel MST (replicated-compute trade)
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_steiner [--cell ukw_1k]
+Writes benchmarks/results/perf/steiner_<cell>.json.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+OUT = Path(__file__).resolve().parent / "results" / "perf"
+
+
+def run_variant(cell: str, name: str, **cfg_kw) -> dict:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.core.dist_steiner import DistSteinerConfig, make_dist_steiner
+    from repro.core.dist_steiner_2d import make_dist_steiner_2d
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    arch = get_arch("steiner")
+    shape = [s for s in arch.shapes if s.name == cell][0]
+    dp = ("data",)
+    n_blocks = mesh.shape["model"]
+    n_rep = mesh.shape["data"]
+    n, e, S = shape.n_nodes, shape.n_edges, shape.batch
+    nb = -(-(-(-n // n_blocks)) // 8) * 8
+    eb = -(-e // (n_rep * n_blocks) // 8 + 1) * 8
+    total_e = n_rep * n_blocks * eb
+    partition_2d = cfg_kw.pop("partition_2d", False)
+    cfg = DistSteinerConfig(n=n, nb=nb, num_seeds=S, max_iters=10_000, **cfg_kw)
+    with jax.set_mesh(mesh):
+        if partition_2d:
+            nf = -(-(-(-n // (n_rep * n_blocks))) // 8) * 8
+            fn = make_dist_steiner_2d(
+                mesh, n=n, nf=nf, num_seeds=S, max_iters=10_000, **cfg_kw
+            )
+        else:
+            fn = make_dist_steiner(mesh, cfg, replica_axes=dp)
+        espec = NamedSharding(mesh, P(("data", "model")))
+        rep = NamedSharding(mesh, P())
+        lowered = fn.lower(
+            jax.ShapeDtypeStruct((total_e,), jnp.int32, sharding=espec),
+            jax.ShapeDtypeStruct((total_e,), jnp.int32, sharding=espec),
+            jax.ShapeDtypeStruct((total_e,), jnp.float32, sharding=espec),
+            jax.ShapeDtypeStruct((S,), jnp.int32, sharding=rep),
+        )
+        compiled = lowered.compile()
+    roof = rl.analyze(compiled, model_flops_total=5.0 * e, n_chips=256)
+    mem = rl.memory_report(compiled)
+    ls = cfg_kw.get("local_steps", 1)
+    row = roof.row()
+    row["wire_bytes_per_relax_pass"] = roof.bytes_wire / ls
+    row["t_total_per_relax_pass"] = (
+        max(roof.t_compute, roof.t_memory) / 1  # compute/memory scale with ls
+        + roof.t_collective / ls
+    )
+    return {"variant": name, "cfg": cfg_kw, "roofline": row,
+            "peak_gb": mem["peak_est_gb"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="ukw_1k")
+    ap.add_argument("--variants", default="base,unfused,lab_i16,ls2,ls4,boruvka")
+    args = ap.parse_args()
+    variants = {
+        "base": {},
+        "unfused": dict(fuse_gather=False),
+        "lab_i16": dict(lab_i16=True),
+        "ls2": dict(local_steps=2),
+        "ls4": dict(local_steps=4),
+        "ls2_i16": dict(local_steps=2, lab_i16=True),
+        "boruvka": dict(mst_algo="boruvka"),
+        "2d": dict(partition_2d=True),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    rows = []
+    for name in args.variants.split(","):
+        r = run_variant(args.cell, name, **variants[name])
+        rows.append(r)
+        rr = r["roofline"]
+        print(
+            f"{name:10s} t_c={rr['t_compute_s']:.3e} t_m={rr['t_memory_s']:.3e} "
+            f"t_x={rr['t_collective_s']:.3e} wire={rr['bytes_wire']:.3e} "
+            f"wire/relax={rr['wire_bytes_per_relax_pass']:.3e} "
+            f"peak={r['peak_gb']:.1f}GB",
+            flush=True,
+        )
+    (OUT / f"steiner_{args.cell}.json").write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Renders EXPERIMENTS.md tables from benchmarks/results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DIR = Path(__file__).resolve().parent / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "deepseek-v3-671b", "granite-moe-1b-a400m", "qwen1.5-32b", "stablelm-12b",
+    "starcoder2-3b", "graphsage-reddit", "graphcast", "schnet", "gatedgcn",
+    "mind", "steiner",
+]
+
+
+def load():
+    rows = []
+    for f in sorted(DIR.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    key = lambda r: (ARCH_ORDER.index(r["arch"]), r["shape"], r["mesh"])
+    return sorted(rows, key=key)
+
+
+def fmt(x, digits=2):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def dryrun_table(rows, mesh):
+    out = [
+        "| arch | shape | status | compile | peak GB (dev) | fits 16GB | note |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | skipped | — | — | — | "
+                f"{r['note'][:80]}… |"
+            )
+            continue
+        m = r["memory"]
+        peak = m.get("analytic_peak_gb", m["peak_est_gb"])
+        note = "analytic (bf16 CPU-emu inflates measured)" if "analytic_peak_gb" in m else "measured"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{r.get('compile_s', 0):.0f}s | {peak:.1f} | "
+            f"{'✓' if m['fits_16gb'] else '✗'} | {note} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="pod16x16"):
+    out = [
+        "| arch | shape | FLOPs/chip | HBM bytes | wire bytes | t_comp s | "
+        "t_mem s | t_coll s | dominant | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        ur = rf.get("useful_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['flops'])} | "
+            f"{fmt(rf['bytes_hbm'])} | {fmt(rf['bytes_wire'])} | "
+            f"{fmt(rf['t_compute_s'])} | {fmt(rf['t_memory_s'])} | "
+            f"{fmt(rf['t_collective_s'])} | {rf['dominant']} | "
+            f"{fmt(ur) if ur else '—'} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = load()
+    print("### Dry-run — single pod (16×16 = 256 chips)\n")
+    print(dryrun_table(rows, "pod16x16"))
+    print("\n### Dry-run — multi-pod (2×16×16 = 512 chips)\n")
+    print(dryrun_table(rows, "pod2x16x16"))
+    print("\n### Roofline — single pod, per step (steiner: per relaxation round)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

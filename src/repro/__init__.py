@@ -1,0 +1,22 @@
+"""repro: distributed 2-approximation Steiner minimal trees in JAX.
+
+A production-grade JAX reproduction (and TPU-native extension) of
+
+    Reza, Sanders, Pearce,
+    "Towards Distributed 2-Approximation Steiner Minimal Trees in
+     Billion-edge Graphs", 2022.
+
+Package layout
+--------------
+core/         the paper's contribution: Voronoi-cell based 2-approx Steiner
+kernels/      Pallas TPU kernels for the relaxation hot loop
+models/       assigned architecture zoo (LM / GNN / RecSys)
+configs/      one config per assigned architecture (+ the paper's own)
+data/         synthetic data pipelines (tokens, RMAT graphs, recsys events)
+optim/        optimizers (AdamW incl. 8-bit states)
+checkpoint/   sharded npz checkpointing w/ elastic reshard
+distributed/  sharding rules, gradient compression, collective helpers
+launch/       production mesh, multi-pod dry-run, train/serve drivers, roofline
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""Sharded npz checkpointing with async save and elastic restore."""
+
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    load_pytree,
+    save_pytree,
+)
+
+__all__ = ["CheckpointManager", "load_pytree", "save_pytree"]

@@ -1,0 +1,184 @@
+"""Fault-tolerance substrate: sharded npz checkpoints.
+
+Design (maps to the multi-thousand-node deployment):
+  * every pytree leaf is saved as one entry of an .npz per *host*; the
+    flat key encodes the tree path. On a real cluster each host writes its
+    local shards (jax.experimental array serialization); on this single
+    host we write the full arrays — the format and restore logic are the
+    same.
+  * saves are ATOMIC (tmp file + rename) and ASYNC (background thread) so
+    the training loop never blocks on IO.
+  * restore is ELASTIC: arrays are loaded host-side and ``device_put``
+    against whatever sharding the *current* mesh prescribes — a job can
+    come back on a different device count (the paper's scale-out design
+    makes all state vertex- or parameter-indexed, so resharding is a pure
+    relayout).
+  * a manifest (step, monotonic id, leaf manifest) guards torn restores;
+    ``latest_step`` scans for the newest complete checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def pstr(path):
+        out = []
+        for p in path:
+            if hasattr(p, "key"):
+                out.append(str(p.key))
+            elif hasattr(p, "idx"):
+                out.append(str(p.idx))
+            else:
+                out.append(str(p))
+        return "/".join(out)
+
+    return {pstr(path): leaf for path, leaf in leaves}
+
+
+def _to_native(a: np.ndarray) -> np.ndarray:
+    """bf16/fp8 (ml_dtypes, numpy kind 'V') → raw uint8 byte view."""
+    if a.dtype.kind == "V":
+        return np.atleast_1d(a).view(np.uint8).reshape(*a.shape, a.dtype.itemsize)
+    return a
+
+
+def _from_native(a: np.ndarray, want_dtype) -> np.ndarray:
+    want = np.dtype(want_dtype)
+    if want.kind == "V" or a.dtype != want:
+        if a.dtype == np.uint8 and want.itemsize and a.shape[-1:] == (want.itemsize,):
+            return a.view(want).reshape(a.shape[:-1])
+    return a.astype(want) if a.dtype != want else a
+
+
+def save_pytree(tree: Any, path: str | Path) -> None:
+    """Atomic synchronous save of a pytree to one .npz."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: _to_native(np.asarray(v)) for k, v in flat.items()}
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(template: Any, path: str | Path, *, shardings: Any = None) -> Any:
+    """Restores into the structure of ``template``.
+
+    ``shardings``: optional pytree of shardings (elastic restore onto the
+    current mesh); default: plain host arrays → jnp arrays.
+    """
+    import jax.numpy as jnp
+
+    path = Path(path)
+    with np.load(path, allow_pickle=False) as z:
+        flat_t = _flatten_with_paths(template)
+        out_flat = {}
+        for k, leaf in flat_t.items():
+            arr = z[k]
+            want = getattr(leaf, "dtype", None)
+            if want is not None:
+                arr = _from_native(arr, want)
+            out_flat[k] = arr
+    # rebuild in template order
+    paths = list(_flatten_with_paths(template).keys())
+    leaves = [out_flat[p] for p in paths]
+    treedef = jax.tree_util.tree_structure(template)
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), restored, shardings
+        )
+    else:
+        restored = jax.tree.map(jnp.asarray, restored)
+    return restored
+
+
+class CheckpointManager:
+    """Async, rolling checkpoint manager with crash-safe manifests.
+
+    Usage:
+      mgr = CheckpointManager(dir, keep=3)
+      mgr.save(step, state)                  # returns immediately
+      step, state = mgr.restore(template)    # newest complete checkpoint
+    """
+
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        # snapshot to host BEFORE handing to the writer thread (donated
+        # buffers may be reused by the next step otherwise)
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+
+        def write():
+            d = self._step_dir(step)
+            d.mkdir(parents=True, exist_ok=True)
+            save_pytree(host, d / "state.npz")
+            manifest = {"step": step, "time": time.time(), "complete": True}
+            tmp = d / "manifest.tmp"
+            tmp.write_text(json.dumps(manifest))
+            os.replace(tmp, d / "manifest.json")
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            d = self._step_dir(s)
+            for f in d.iterdir():
+                f.unlink()
+            d.rmdir()
+
+    def steps(self):
+        out = []
+        for d in self.dir.glob("step_*"):
+            m = d / "manifest.json"
+            if m.exists():
+                try:
+                    if json.loads(m.read_text()).get("complete"):
+                        out.append(int(d.name.split("_")[1]))
+                except (json.JSONDecodeError, ValueError):
+                    continue  # torn manifest → not restorable
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, *, step: Optional[int] = None,
+                shardings: Any = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        state = load_pytree(
+            template, self._step_dir(step) / "state.npz", shardings=shardings
+        )
+        return step, state

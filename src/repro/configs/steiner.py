@@ -1,0 +1,21 @@
+"""The paper's own workload: distributed 2-approx Steiner minimal trees.
+
+Shape cells mirror Table III scales sized for v5e HBM (vertex-state
+all-gather bounds N; see DESIGN.md §Memory): LVJ-like (8M vertices, 128M
+directed edges), UKW-like (64M / 4B), CLW-like (512M / 64B, |S|=10K).
+"""
+
+from repro.configs.base import ArchSpec, SteinerConfig, STEINER_SHAPES
+
+MODEL = SteinerConfig(name="steiner", mode="bucket", mst_algo="prim")
+
+REDUCED = SteinerConfig(name="steiner-reduced")
+
+ARCH = ArchSpec(
+    arch_id="steiner",
+    family="steiner",
+    model=MODEL,
+    shapes=STEINER_SHAPES,
+    source="this paper (Reza et al. 2022)",
+    reduced=REDUCED,
+)

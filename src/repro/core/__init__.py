@@ -1,0 +1,32 @@
+"""The paper's primary contribution: Voronoi-cell 2-approx Steiner trees.
+
+Single-device pipeline: :func:`repro.core.steiner.steiner_tree`.
+Distributed (shard_map) pipeline: :mod:`repro.core.dist_steiner`.
+Numpy oracles (Dijkstra / Mehlhorn / KMB / exact): :mod:`repro.core.ref`.
+"""
+
+from repro.core.graph import EllGraph, Graph, from_edges, sort_by_dst, to_ell
+from repro.core.steiner import SteinerResult, steiner_tree
+from repro.core.tree import SteinerTree, tree_edge_list
+from repro.core.voronoi import (
+    VoronoiState,
+    VoronoiStats,
+    voronoi_cells,
+    voronoi_cells_frontier,
+)
+
+__all__ = [
+    "EllGraph",
+    "Graph",
+    "from_edges",
+    "sort_by_dst",
+    "to_ell",
+    "SteinerResult",
+    "steiner_tree",
+    "SteinerTree",
+    "tree_edge_list",
+    "VoronoiState",
+    "VoronoiStats",
+    "voronoi_cells",
+    "voronoi_cells_frontier",
+]

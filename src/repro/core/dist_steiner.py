@@ -1,0 +1,538 @@
+"""Distributed Steiner tree — the paper's Alg. 3 on a JAX device mesh.
+
+Mapping the paper's MPI design onto XLA SPMD (see DESIGN.md §Adaptation):
+
+  paper (HavoqGT / MPI)                     this module (shard_map)
+  ----------------------------------------  --------------------------------
+  graph partitions, ~equal vertices/rank    1D partition: vertex blocks over
+                                            the "model" axis; edges bucketed
+                                            by dst-block and spread over the
+                                            replica axes ("pod", "data")
+  async vertex-centric visitors             bulk-synchronous relaxation with
+                                            an optional *local-steps* mode: T
+                                            collective-free local rounds per
+                                            global exchange (stale reads are
+                                            safe — distances only decrease)
+  priority message queue                    Δ-bucketed thresholding (only
+                                            low-distance sources may send)
+  MPI_Allreduce(MPI_MIN) on E_N distances   lax.pmin on the S² pair table
+  Allreduce(MIN) on endpoint vertex ids     two more lexicographic pmin passes
+  replicated sequential MST (Boost Prim)    replicated dense Prim / Borůvka
+  TREE_EDGE_ASYNC pred-walk                 pointer-doubling with a gathered
+                                            pred vector
+  chunked collectives for |S|=10K (§V-F)    ``pair_chunks`` option
+
+State layout per device: its vertex block (nb,) of (dist, lab, pred),
+replicated across the replica axes; its edge shard (Eb,). One relaxation
+round costs one all-gather of (dist, lab) over "model" plus three pmins of
+(nb,) over the replica axes — these collectives ARE the roofline terms the
+perf loop iterates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distance_graph import local_pair_tables
+from repro.core.mst import boruvka_dense, prim_dense
+from repro.core.tree import bridge_endpoints
+
+INF = jnp.inf
+IMAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Host-side partitioning result (numpy; device placement by caller).
+
+    Flat edge arrays have length ``n_replica * n_blocks * eb`` laid out
+    replica-major so that ``P((*replica_axes, vert_axis))`` puts bucket
+    ``(r, b)`` on replica r / vertex-column b.
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    n: int  # true vertex count
+    nb: int  # vertex block size (padded)
+    eb: int  # edges per device (padded)
+    n_blocks: int
+    n_replica: int
+
+    @property
+    def npad(self) -> int:
+        return self.nb * self.n_blocks
+
+
+def partition_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    n: int,
+    *,
+    n_replica: int,
+    n_blocks: int,
+    symmetrize: bool = True,
+    block_multiple: int = 8,
+) -> Partition:
+    """1D dst-block edge partition (paper §IV scale-out design).
+
+    Every directed edge goes to the vertex column owning its destination
+    block; edges within a block are dealt round-robin across replicas.
+    Padding edges are ``(0, block_base, +inf)`` — inert under min-plus.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(w, np.float32)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    nb = -(-n // n_blocks)
+    nb = -(-nb // block_multiple) * block_multiple
+    blk = dst // nb
+    order = np.argsort(blk, kind="stable")
+    src, dst, w, blk = src[order], dst[order], w[order], blk[order]
+    counts = np.bincount(blk, minlength=n_blocks)
+    # round-robin replica assignment within each block
+    within = np.arange(len(src)) - np.repeat(
+        np.concatenate([[0], np.cumsum(counts)[:-1]]), counts
+    )
+    rep = within % n_replica
+    per_bucket = np.zeros((n_replica, n_blocks), np.int64)
+    for b in range(n_blocks):
+        c = counts[b]
+        per_bucket[:, b] = c // n_replica + (np.arange(n_replica) < c % n_replica)
+    eb = max(1, int(per_bucket.max()))
+    eb = -(-eb // block_multiple) * block_multiple
+    osrc = np.zeros((n_replica, n_blocks, eb), np.int32)
+    odst = np.zeros((n_replica, n_blocks, eb), np.int32)
+    ow = np.full((n_replica, n_blocks, eb), np.inf, np.float32)
+    for b in range(n_blocks):
+        odst[:, b, :] = b * nb  # padding dst = block base (local id 0)
+    # stable fill
+    pos = np.zeros((n_replica, n_blocks), np.int64)
+    bucket_key = rep * n_blocks + blk
+    korder = np.argsort(bucket_key, kind="stable")
+    ks, kd, kw, kk = src[korder], dst[korder], w[korder], bucket_key[korder]
+    uniq, starts = np.unique(kk, return_index=True)
+    ends = np.r_[starts[1:], len(kk)]
+    for u, s0, s1 in zip(uniq, starts, ends):
+        r, b = divmod(int(u), n_blocks)
+        c = s1 - s0
+        osrc[r, b, :c] = ks[s0:s1]
+        odst[r, b, :c] = kd[s0:s1]
+        ow[r, b, :c] = kw[s0:s1]
+        pos[r, b] = c
+    return Partition(
+        src=osrc.reshape(-1),
+        dst=odst.reshape(-1),
+        w=ow.reshape(-1),
+        n=n,
+        nb=nb,
+        eb=eb,
+        n_blocks=n_blocks,
+        n_replica=n_replica,
+    )
+
+
+# ----------------------------------------------------------------------------
+# shard_map pipeline
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSteinerConfig:
+    """Static configuration of the distributed pipeline."""
+
+    n: int
+    nb: int
+    num_seeds: int
+    mode: str = "bucket"  # "dense" | "bucket"
+    mst_algo: str = "prim"  # "prim" | "boruvka"
+    local_steps: int = 1  # >1: async-style collective amortization
+    pair_chunks: int = 1  # paper §V-F chunked Allreduce on the S² table
+    max_iters: Optional[int] = None
+    delta: Optional[float] = None
+    fuse_gather: bool = True  # single fused (dist, lab) all-gather
+    lab_i16: bool = False  # gather labels as int16 (S < 32768): 6B/vertex
+
+
+def _spec(*names):
+    from jax.sharding import PartitionSpec as P
+
+    return P(*names)
+
+
+def make_dist_steiner(
+    mesh,
+    cfg: DistSteinerConfig,
+    *,
+    vert_axis: str = "model",
+    replica_axes: Sequence[str] = ("data",),
+):
+    """Builds the jitted distributed Steiner pipeline for ``mesh``.
+
+    Returns ``fn(src, dst, w, seeds) -> (dist, lab, pred, marked, path_edge,
+    bridge (bu, bv, bw, bvalid), total, num_edges, stats)`` where the edge
+    arrays follow the :class:`Partition` layout.
+    """
+    from jax.sharding import NamedSharding
+
+    replica_axes = tuple(replica_axes)
+    all_axes = replica_axes + (vert_axis,)
+    S = cfg.num_seeds
+    nb = cfg.nb
+    n_blocks = mesh.shape[vert_axis]
+    npad = nb * n_blocks
+    cap = cfg.max_iters if cfg.max_iters is not None else 4 * cfg.n + 64
+    cap = min(cap, 2**31 - 2)  # int32 loop counter at billion-vertex scale
+
+    def gather_state(dist_l, lab_l):
+        """All-gather the vertex state along the vertex axis.
+
+        ``fuse_gather`` packs (dist, lab) into one f32 collective — labels
+        are exact in f32 for S < 2^24 (paper max |S| = 10K).
+        ``lab_i16`` instead gathers labels as int16 (valid for S < 32768):
+        6 instead of 8 wire bytes per vertex per round.
+        """
+        if cfg.lab_i16:
+            assert S < 32767, S
+            distf = jax.lax.all_gather(dist_l, vert_axis, tiled=True)
+            lab16 = jax.lax.all_gather(
+                lab_l.astype(jnp.int16), vert_axis, tiled=True
+            )
+            return distf, lab16.astype(jnp.int32)
+        if cfg.fuse_gather:
+            packed = jnp.stack([dist_l, lab_l.astype(jnp.float32)], axis=0)
+            full = jax.lax.all_gather(packed, vert_axis, axis=1, tiled=True)
+            return full[0], full[1].astype(jnp.int32)
+        distf = jax.lax.all_gather(dist_l, vert_axis, tiled=True)
+        labf = jax.lax.all_gather(lab_l, vert_axis, tiled=True)
+        return distf, labf
+
+    def body(src, dst, w, seeds):
+        my_blk = jax.lax.axis_index(vert_axis)
+        off = my_blk * nb
+        gids = jnp.arange(nb, dtype=jnp.int32) + off
+        ldst = dst - off  # partitioner guarantees dst ∈ my block
+
+        # ---- INITIALIZATION (paper Alg. 3 lines 1-9)
+        sidx = jnp.arange(S, dtype=jnp.int32)
+        inblk = (seeds >= off) & (seeds < off + nb)
+        tgt = jnp.where(inblk, seeds - off, nb)
+        dist_l = jnp.full((nb + 1,), INF, jnp.float32).at[tgt].set(0.0)[:nb]
+        lab_l = jnp.full((nb + 1,), S, jnp.int32).at[tgt].set(sidx)[:nb]
+        pred_l = gids
+
+        if cfg.mode == "bucket":
+            wfin = jnp.where(jnp.isfinite(w), w, 0.0)
+            wsum = jax.lax.psum(jnp.sum(wfin), all_axes)
+            wcnt = jax.lax.psum(
+                jnp.sum(jnp.isfinite(w).astype(jnp.float32)), all_axes
+            )
+            delta = (
+                jnp.float32(cfg.delta)
+                if cfg.delta is not None
+                else jnp.maximum(wsum / jnp.maximum(wcnt, 1.0), 1e-6)
+            )
+        else:
+            delta = jnp.float32(0.0)
+
+        def local_relax(dist_l, lab_l, pred_l, distf, labf, theta):
+            """One relaxation against (possibly stale) gathered state.
+
+            Sources in our own block read the *fresh* local copy — the
+            paper's asynchronous in-rank progress.
+            """
+            sin = (src >= off) & (src < off + nb)
+            lsrc = jnp.clip(src - off, 0, nb - 1)
+            dsrc = jnp.where(sin, dist_l[lsrc], distf[src])
+            lsrc_lab = jnp.where(sin, lab_l[lsrc], labf[src])
+            cand = dsrc + w
+            if cfg.mode == "bucket":
+                cand = jnp.where(dsrc <= theta, cand, INF)
+            m = jax.ops.segment_min(cand, ldst, nb)
+            e1 = cand == m[ldst]
+            ml = jax.ops.segment_min(jnp.where(e1, lsrc_lab, IMAX), ldst, nb)
+            e2 = e1 & (lsrc_lab == ml[ldst])
+            ms = jax.ops.segment_min(jnp.where(e2, src, IMAX), ldst, nb)
+            upd = jnp.isfinite(m) & (
+                (m < dist_l)
+                | ((m == dist_l) & (ml < lab_l))
+                | ((m == dist_l) & (ml == lab_l) & (ms < pred_l))
+            )
+            new = (
+                jnp.where(upd, m, dist_l),
+                jnp.where(upd, ml, lab_l),
+                jnp.where(upd, ms, pred_l),
+            )
+            att = jnp.sum(jnp.isfinite(cand)).astype(jnp.float32)
+            return new, upd, att
+
+        def merge_replicas(dist_l, lab_l, pred_l):
+            """Lexicographic pmin of diverged replica states (local-steps)."""
+            d = jax.lax.pmin(dist_l, replica_axes)
+            lc = jnp.where(dist_l == d, lab_l, IMAX)
+            l = jax.lax.pmin(lc, replica_axes)
+            pc = jnp.where((dist_l == d) & (lab_l == l), pred_l, IMAX)
+            p = jax.lax.pmin(pc, replica_axes)
+            return d, l, p
+
+        # ---- VORONOI_CELL_ASYNC (paper Alg. 4)
+        def vbody(carry):
+            dist_l, lab_l, pred_l, theta, it, rlx, msg, _ = carry
+            distf, labf = gather_state(dist_l, lab_l)
+
+            def inner(i, c):
+                dl, ll, pl, msg_i = c
+                (dl, ll, pl), _, att = local_relax(dl, ll, pl, distf, labf, theta)
+                return dl, ll, pl, msg_i + att
+
+            dl, ll, pl, msg_i = jax.lax.fori_loop(
+                0, cfg.local_steps, inner, (dist_l, lab_l, pred_l, 0.0)
+            )
+            dl, ll, pl = merge_replicas(dl, ll, pl)
+            changed_l = (
+                jnp.any(dl != dist_l) | jnp.any(ll != lab_l) | jnp.any(pl != pred_l)
+            )
+            changed = jax.lax.pmax(changed_l.astype(jnp.int32), all_axes) > 0
+            imp = jax.lax.psum(
+                jnp.sum((dl != dist_l) | (ll != lab_l) | (pl != pred_l)).astype(
+                    jnp.float32
+                ),
+                (vert_axis,),
+            )
+            msg_g = jax.lax.psum(msg_i, all_axes)
+            if cfg.mode == "bucket":
+                # terminate only on a no-change round with every source active
+                mx_l = jnp.max(jnp.where(jnp.isfinite(dl), dl, -INF))
+                max_fin = jax.lax.pmax(mx_l, all_axes)
+                done = ~changed & (theta >= max_fin)
+                theta = jnp.where(changed, theta, theta + delta)
+                work = ~done
+            else:
+                work = changed
+            return (dl, ll, pl, theta, it + 1, rlx + imp, msg + msg_g, work)
+
+        def vcond(carry):
+            *_, it, _, _, work = carry
+            return work & (it < cap)
+
+        dist_l, lab_l, pred_l, _, iters, rlx, msg, _ = jax.lax.while_loop(
+            vcond,
+            vbody,
+            (
+                dist_l,
+                lab_l,
+                pred_l,
+                jnp.float32(0.0),
+                jnp.int32(0),
+                jnp.float32(0.0),
+                jnp.float32(0.0),
+                jnp.bool_(True),
+            ),
+        )
+
+        # ---- MIN distance edges → G'1 (paper Alg. 5) + Allreduce(MIN)
+        distf, labf = gather_state(dist_l, lab_l)
+        dm_l, um_l, vm_l = local_pair_tables(
+            src, dst, w, distf[src], distf[dst], labf[src], labf[dst], S
+        )
+
+        def chunk_pmin(x, fill):
+            if cfg.pair_chunks <= 1:
+                return jax.lax.pmin(x, all_axes)
+            csz = -(-(S * S) // cfg.pair_chunks)
+            pad = csz * cfg.pair_chunks - S * S
+            xp = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+            xp = xp.reshape(cfg.pair_chunks, csz)
+
+            def cbody(i, acc):
+                return acc.at[i].set(jax.lax.pmin(xp[i], all_axes))
+
+            out = jax.lax.fori_loop(0, cfg.pair_chunks, cbody, jnp.zeros_like(xp))
+            return out.reshape(-1)[: S * S]
+
+        dmat = chunk_pmin(dm_l, INF)
+        um_c = jnp.where(dm_l == dmat, um_l, IMAX)
+        umat = chunk_pmin(um_c, IMAX)
+        vm_c = jnp.where((dm_l == dmat) & (um_l == umat), vm_l, IMAX)
+        vmat = chunk_pmin(vm_c, IMAX)
+
+        # ---- replicated MST (paper Alg. 3 line 17)
+        wmat = dmat.reshape(S, S)
+        wmat = jnp.minimum(wmat, wmat.T)
+        wmat = jnp.where(jnp.eye(S, dtype=bool), INF, wmat)
+        parent = prim_dense(wmat) if cfg.mst_algo == "prim" else boruvka_dense(wmat)
+
+        # ---- bridge pruning + TREE_EDGE (paper Alg. 6), pointer doubling
+        bu, bv, bw, bvalid = bridge_endpoints(dmat, umat, vmat, distf, parent, S)
+        predf = jax.lax.all_gather(pred_l, vert_axis, tiled=True)  # (npad,)
+        ep_tgt_u = jnp.where(bvalid & (bu >= off) & (bu < off + nb), bu - off, nb)
+        ep_tgt_v = jnp.where(bvalid & (bv >= off) & (bv < off + nb), bv - off, nb)
+        marked_l = (
+            jnp.zeros((nb + 1,), jnp.bool_)
+            .at[ep_tgt_u]
+            .set(True)
+            .at[ep_tgt_v]
+            .set(True)[:nb]
+        )
+
+        def mbody(carry):
+            marked_l, ptr, _ = carry
+            markedf = jax.lax.all_gather(marked_l, vert_axis, tiled=True)
+            t = ptr - off
+            inb = (t >= 0) & (t < nb)
+            hit = (
+                jax.ops.segment_max(
+                    jnp.where(inb, markedf.astype(jnp.int32), 0),
+                    jnp.clip(t, 0, nb - 1),
+                    nb,
+                )
+                > 0
+            )
+            new = marked_l | hit
+            ch = jax.lax.pmax(
+                jnp.any(new != marked_l).astype(jnp.int32), all_axes
+            )
+            return new, ptr[ptr], ch > 0
+
+        marked_l, _, _ = jax.lax.while_loop(
+            lambda c: c[2], mbody, (marked_l, predf, jnp.bool_(True))
+        )
+
+        path_edge_l = marked_l & (pred_l != gids)
+        path_w = jnp.where(path_edge_l, dist_l - distf[pred_l], 0.0)
+        total = jax.lax.psum(jnp.sum(path_w), (vert_axis,)) + jnp.sum(bw)
+        nedges = jax.lax.psum(
+            jnp.sum(path_edge_l).astype(jnp.int32), (vert_axis,)
+        ) + jnp.sum(bvalid).astype(jnp.int32)
+
+        stats = jnp.stack([iters.astype(jnp.float32), rlx, msg])
+        return (
+            dist_l,
+            lab_l,
+            pred_l,
+            marked_l,
+            path_edge_l,
+            bu,
+            bv,
+            bw,
+            bvalid,
+            total,
+            nedges,
+            stats,
+        )
+
+    P = _spec
+    edge_spec = P((*replica_axes, vert_axis))
+    state_spec = P(vert_axis)
+    rep = P()
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(edge_spec, edge_spec, edge_spec, rep),
+        out_specs=(
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            rep,
+            rep,
+            rep,
+            rep,
+            rep,
+            rep,
+            rep,
+        ),
+        check_vma=False,
+    )
+    in_sh = tuple(
+        NamedSharding(mesh, s) for s in (edge_spec, edge_spec, edge_spec, rep)
+    )
+    return jax.jit(fn, in_shardings=in_sh)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSteinerResult:
+    """Host-friendly view of the distributed pipeline output."""
+
+    dist: np.ndarray
+    lab: np.ndarray
+    pred: np.ndarray
+    marked: np.ndarray
+    path_edge: np.ndarray
+    bridge_u: np.ndarray
+    bridge_v: np.ndarray
+    bridge_w: np.ndarray
+    bridge_valid: np.ndarray
+    total_distance: float
+    num_edges: int
+    iterations: int
+    relaxations: float
+    messages: float
+
+    def edge_set(self):
+        out = set()
+        for v in np.nonzero(self.path_edge)[0]:
+            a, b = int(self.pred[v]), int(v)
+            out.add((min(a, b), max(a, b)))
+        for i in np.nonzero(self.bridge_valid)[0]:
+            a, b = int(self.bridge_u[i]), int(self.bridge_v[i])
+            out.add((min(a, b), max(a, b)))
+        return out
+
+
+def run_dist_steiner(
+    mesh,
+    part: Partition,
+    seeds: np.ndarray,
+    *,
+    vert_axis: str = "model",
+    replica_axes: Sequence[str] = ("data",),
+    **cfg_kw,
+) -> DistSteinerResult:
+    """Convenience wrapper: partition → device_put → jitted pipeline → host."""
+    from jax.sharding import NamedSharding
+
+    cfg = DistSteinerConfig(
+        n=part.n, nb=part.nb, num_seeds=len(seeds), **cfg_kw
+    )
+    fn = make_dist_steiner(
+        mesh, cfg, vert_axis=vert_axis, replica_axes=replica_axes
+    )
+    edge_spec = _spec((*tuple(replica_axes), vert_axis))
+    put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
+    args = (
+        put(part.src, edge_spec),
+        put(part.dst, edge_spec),
+        put(part.w, edge_spec),
+        put(np.asarray(seeds, np.int32), _spec()),
+    )
+    out = fn(*args)
+    (dist, lab, pred, marked, path_edge, bu, bv, bw, bvalid, total, ne, stats) = [
+        np.asarray(x) for x in out
+    ]
+    return DistSteinerResult(
+        dist=dist[: part.n],
+        lab=lab[: part.n],
+        pred=pred[: part.n],
+        marked=marked[: part.n],
+        path_edge=path_edge[: part.n],
+        bridge_u=bu,
+        bridge_v=bv,
+        bridge_w=bw,
+        bridge_valid=bvalid,
+        total_distance=float(total),
+        num_edges=int(ne),
+        iterations=int(stats[0]),
+        relaxations=float(stats[1]),
+        messages=float(stats[2]),
+    )

@@ -1,0 +1,84 @@
+"""End-to-end 2-approximation Steiner tree — the paper's Alg. 2 / Alg. 3.
+
+Single-process (one device) pipeline; the multi-device shard_map version
+lives in :mod:`repro.core.dist_steiner`. Both run the same five stages:
+
+  1. Voronoi cells (multi-source shortest paths)      — voronoi.py
+  2. distance graph G'1 (min cross-cell bridges)      — distance_graph.py
+  3. MST G'2 of G'1 (replicated, Prim or Borůvka)     — mst.py
+  4. bridge pruning to the MST pairs                  — tree.py
+  5. predecessor walk → tree edges, total distance    — tree.py
+
+Approximation bound: D(G_S)/D_min <= 2(1 - 1/l) by Mehlhorn's proof [17]
+(every MST of G'1 is an MST of the complete seed distance graph G_1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distance_graph as dgmod
+from repro.core import mst as mstmod
+from repro.core import tree as treemod
+from repro.core import voronoi as vmod
+from repro.core.graph import Graph
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SteinerResult:
+    tree: treemod.SteinerTree
+    state: vmod.VoronoiState
+    stats: vmod.VoronoiStats
+    parent: jax.Array  # (S,) MST parent over seed indices
+    dmat: jax.Array  # (S*S,) distance-graph weights
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "mst_algo", "max_iters", "num_seeds")
+)
+def steiner_tree(
+    g: Graph,
+    seeds: jax.Array,
+    *,
+    num_seeds: Optional[int] = None,
+    mode: str = "bucket",
+    mst_algo: str = "prim",
+    delta: Optional[float] = None,
+    max_iters: Optional[int] = None,
+) -> SteinerResult:
+    """Computes a 2-approximate Steiner minimal tree for (g, seeds).
+
+    Args:
+      g: symmetric weighted graph (padded COO).
+      seeds: (S,) int32 seed vertex ids.
+      num_seeds: static |S| (defaults to seeds.shape[0]).
+      mode: Voronoi relaxation schedule — "dense" | "bucket".
+      mst_algo: "prim" (paper-faithful sequential analogue) | "boruvka".
+      delta: bucket width (mode="bucket").
+      max_iters: safety cap on relaxation rounds.
+
+    Returns:
+      SteinerResult; ``result.tree.total_distance`` is D(G_S).
+    """
+    S = int(num_seeds if num_seeds is not None else seeds.shape[0])
+    st, stats = vmod.voronoi_cells(
+        g, seeds, mode=mode, delta=delta, max_iters=max_iters
+    )
+    dmat, umat, vmat = dgmod.distance_graph(g, st, S)
+    wmat = dmat.reshape(S, S)
+    wmat = jnp.minimum(wmat, wmat.T)  # symmetrize upper-triangular table
+    wmat = jnp.where(jnp.eye(S, dtype=bool), jnp.inf, wmat)
+    if mst_algo == "prim":
+        parent = mstmod.prim_dense(wmat)
+    elif mst_algo == "boruvka":
+        parent = mstmod.boruvka_dense(wmat)
+    else:
+        raise ValueError(f"unknown mst_algo: {mst_algo!r}")
+    tree = treemod.extract_tree(g.n, st, dmat, umat, vmat, parent, S)
+    return SteinerResult(tree=tree, state=st, stats=stats, parent=parent, dmat=dmat)

@@ -1,0 +1,302 @@
+"""Voronoi cell computation — Alg. 2 Step 1 / Alg. 4 of the paper.
+
+The paper computes all |S| Voronoi cells at once with an *asynchronous*
+Bellman-Ford over MPI, accelerated by a best-effort priority message queue
+(§IV). XLA's SPMD model has no asynchronous point-to-point messages, so we
+adapt the insight rather than emulate the mechanism (see DESIGN.md):
+
+* ``mode="dense"``    — bulk-synchronous Bellman-Ford: every edge relaxes
+  every round. This is the FIFO-queue baseline of the paper's §V-C.
+* ``mode="bucket"``   — Δ-bucketed relaxation: only edges whose source
+  distance is below the current threshold may relax, mimicking the paper's
+  priority queue (low-distance messages first). Wasteful long-distance
+  over-estimates are never propagated, cutting total *useful work* exactly
+  like the paper's message-count reduction (Fig. 5/6).
+* ``mode="frontier"`` — top-K compacted frontier over the ELL view: each
+  round gathers the K lowest-distance *changed* vertices and relaxes only
+  their adjacency rows. Work-proportional (the true TPU analogue of a
+  priority queue); used by the perf-optimized configuration.
+
+All modes converge to the same unique fixpoint because updates use a strict
+lexicographic order on ``(dist, lab, pred)`` — identical to the numpy
+Dijkstra oracle in :mod:`repro.core.ref`.
+
+Per-vertex state (paper Table II):
+  dist[v] = d1(src(v), v)    lab[v] = index of owning seed    pred[v]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import EllGraph, Graph
+
+INF = jnp.inf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VoronoiState:
+    """Per-vertex Voronoi state: (dist, lab, pred)."""
+
+    dist: jax.Array  # (N,) f32
+    lab: jax.Array  # (N,) i32; == S for unreached
+    pred: jax.Array  # (N,) i32; == v for seeds / unreached
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VoronoiStats:
+    """Convergence statistics (the paper's Fig. 5/6 message metrics)."""
+
+    iterations: jax.Array  # i32 — number of global rounds
+    relaxations: jax.Array  # f32 — # edge relaxations that improved a vertex
+    messages: jax.Array  # f32 — # edge relaxations attempted ("messages")
+
+
+def init_state(n: int, seeds: jax.Array) -> VoronoiState:
+    """Paper Alg. 3 INITIALIZATION: seeds at distance 0 owning themselves."""
+    S = seeds.shape[0]
+    dist = jnp.full((n,), INF, jnp.float32).at[seeds].set(0.0)
+    lab = jnp.full((n,), S, jnp.int32).at[seeds].set(jnp.arange(S, dtype=jnp.int32))
+    pred = jnp.arange(n, dtype=jnp.int32)
+    return VoronoiState(dist=dist, lab=lab, pred=pred)
+
+
+def relax_dense(
+    g: Graph,
+    st: VoronoiState,
+    active_cand: Optional[jax.Array] = None,
+) -> tuple[VoronoiState, jax.Array, jax.Array]:
+    """One synchronous relaxation over the (masked) edge list.
+
+    Args:
+      g: COO graph (padded edges carry +inf weight).
+      st: current state.
+      active_cand: optional (E,) f32 candidate override; default
+        ``dist[src] + w``. Callers mask inactive edges with +inf.
+
+    Returns:
+      (new_state, improved_count f32, attempted_count f32).
+    """
+    n = g.n
+    S_sentinel = jnp.int32(jnp.iinfo(jnp.int32).max)
+    cand = st.dist[g.src] + g.w if active_cand is None else active_cand
+    lab_src = st.lab[g.src]
+
+    # Lexicographic 3-pass segment argmin on (cand, lab, src).
+    m = jax.ops.segment_min(cand, g.dst, n)
+    elig1 = cand == m[g.dst]
+    minlab = jax.ops.segment_min(
+        jnp.where(elig1, lab_src, S_sentinel), g.dst, n
+    )
+    elig2 = elig1 & (lab_src == minlab[g.dst])
+    minsrc = jax.ops.segment_min(
+        jnp.where(elig2, g.src, S_sentinel), g.dst, n
+    )
+
+    # Strict lexicographic improvement on (dist, lab, pred); finite only.
+    upd = jnp.isfinite(m) & (
+        (m < st.dist)
+        | ((m == st.dist) & (minlab < st.lab))
+        | ((m == st.dist) & (minlab == st.lab) & (minsrc < st.pred))
+    )
+    new = VoronoiState(
+        dist=jnp.where(upd, m, st.dist),
+        lab=jnp.where(upd, minlab, st.lab),
+        pred=jnp.where(upd, minsrc, st.pred),
+    )
+    return new, upd
+
+
+def _changed(a: VoronoiState, b: VoronoiState) -> jax.Array:
+    return (
+        jnp.any(a.dist != b.dist) | jnp.any(a.lab != b.lab) | jnp.any(a.pred != b.pred)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "max_iters")
+)
+def voronoi_cells(
+    g: Graph,
+    seeds: jax.Array,
+    *,
+    mode: str = "bucket",
+    delta: Optional[float] = None,
+    max_iters: Optional[int] = None,
+) -> tuple[VoronoiState, VoronoiStats]:
+    """Computes all Voronoi cells (paper Alg. 2 Step 1).
+
+    Args:
+      g: symmetric weighted graph.
+      seeds: (S,) int32 seed vertex ids.
+      mode: "dense" (FIFO analogue) or "bucket" (priority analogue).
+      delta: bucket width for mode="bucket"; default mean finite weight.
+      max_iters: safety cap on rounds (default 4n + 64).
+
+    Returns:
+      (VoronoiState, VoronoiStats)
+    """
+    n = g.n
+    cap = jnp.int32(min(max_iters if max_iters is not None else 4 * n + 64, 2**31 - 2))
+    st0 = init_state(n, seeds)
+    # out-degree: an improved vertex "sends a message" to every neighbor
+    # (the paper's generated-message-traffic metric, Fig. 6)
+    deg = jax.ops.segment_sum(
+        jnp.isfinite(g.w).astype(jnp.float32), g.src, n
+    )
+
+    if mode == "dense":
+
+        def body(carry):
+            st, it, rlx, msg, _ = carry
+            new, upd = relax_dense(g, st)
+            return (
+                new,
+                it + 1,
+                rlx + jnp.sum(upd).astype(jnp.float32),
+                msg + jnp.sum(jnp.where(upd, deg, 0.0)),
+                _changed(st, new),
+            )
+
+        def cond(carry):
+            _, it, _, _, changed = carry
+            return changed & (it < cap)
+
+        st, iters, rlx, msg, _ = jax.lax.while_loop(
+            cond, body, (st0, jnp.int32(0), 0.0, 0.0, jnp.bool_(True))
+        )
+        return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+
+    if mode == "bucket":
+        finite_w = jnp.where(jnp.isfinite(g.w), g.w, 0.0)
+        n_real = jnp.maximum(jnp.sum(jnp.isfinite(g.w)), 1)
+        d = (
+            jnp.float32(delta)
+            if delta is not None
+            else jnp.maximum(jnp.sum(finite_w) / n_real, 1e-6)
+        )
+
+        def body(carry):
+            st, theta, it, rlx, msg, _ = carry
+            active = st.dist[g.src] <= theta
+            cand = jnp.where(active, st.dist[g.src] + g.w, INF)
+            new, upd = relax_dense(g, st, active_cand=cand)
+            changed = _changed(st, new)
+            # Terminate only when a no-change round had EVERY source active
+            # (such a round is equivalent to a dense fixpoint check);
+            # otherwise advance the bucket threshold by Δ and keep going.
+            max_fin = jnp.max(jnp.where(jnp.isfinite(new.dist), new.dist, -INF))
+            done = ~changed & (theta >= max_fin)
+            theta = jnp.where(changed, theta, theta + d)
+            return (
+                new,
+                theta,
+                it + 1,
+                rlx + jnp.sum(upd).astype(jnp.float32),
+                msg + jnp.sum(jnp.where(upd, deg, 0.0)),
+                ~done,
+            )
+
+        def cond(carry):
+            _, _, it, _, _, work = carry
+            return work & (it < cap)
+
+        st, _, iters, rlx, msg, _ = jax.lax.while_loop(
+            cond,
+            body,
+            (st0, jnp.float32(0.0), jnp.int32(0), 0.0, 0.0, jnp.bool_(True)),
+        )
+        return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+
+    raise ValueError(f"unknown mode: {mode!r} (use 'dense' | 'bucket')")
+
+
+# ----------------------------------------------------------------------------
+# Frontier-compacted relaxation over the ELL view (perf-optimized path).
+# ----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("frontier_size", "max_rounds"))
+def voronoi_cells_frontier(
+    ell: EllGraph,
+    seeds: jax.Array,
+    *,
+    frontier_size: int = 1024,
+    max_rounds: Optional[int] = None,
+) -> tuple[VoronoiState, VoronoiStats]:
+    """Top-K compacted-frontier Voronoi cells over the ELL adjacency.
+
+    The TPU-native priority queue: each round selects (up to) the K ELL rows
+    whose owning vertex (a) changed since it was last expanded and (b) has
+    the smallest tentative distance, then relaxes only those rows' edges.
+    Work per round is O(K · k) instead of O(E) — the paper's message
+    prioritization made work-proportional.
+    """
+    n = ell.n
+    R, k = ell.nbr.shape
+    S = seeds.shape[0]
+    S_sent = jnp.int32(jnp.iinfo(jnp.int32).max)
+    cap = jnp.int32(min(max_rounds if max_rounds is not None else 16 * n + 64, 2**31 - 2))
+
+    st0 = init_state(n, seeds)
+    dirty0 = jnp.zeros((R,), jnp.bool_).at[:].set(
+        jnp.isin(ell.row2v, seeds)
+    )  # rows of seed vertices start dirty
+
+    def body(carry):
+        st, dirty, it, rlx, msg = carry
+        # --- select top-K lowest-distance dirty rows (the "priority queue")
+        rowdist = jnp.where(dirty, st.dist[ell.row2v], INF)
+        neg = -rowdist  # top_k selects largest
+        _, rows = jax.lax.top_k(neg, frontier_size)
+        sel_ok = jnp.isfinite(rowdist[rows])
+        # mark selected rows clean
+        dirty = dirty.at[rows].set(dirty[rows] & ~sel_ok)
+        # --- gather + relax the selected rows' edges
+        nbr = ell.nbr[rows]  # (K, k)
+        wgt = jnp.where(sel_ok[:, None], ell.wgt[rows], INF)
+        v_of = ell.row2v[rows]  # (K,)
+        cand = st.dist[v_of][:, None] + wgt  # (K, k)
+        labc = jnp.where(sel_ok, st.lab[v_of], S_sent)
+        srcc = jnp.where(sel_ok, v_of, S_sent)
+        flat_dst = nbr.reshape(-1)
+        flat_cand = cand.reshape(-1)
+        flat_lab = jnp.broadcast_to(labc[:, None], cand.shape).reshape(-1)
+        flat_src = jnp.broadcast_to(srcc[:, None], cand.shape).reshape(-1)
+
+        m = jax.ops.segment_min(flat_cand, flat_dst, n)
+        e1 = flat_cand == m[flat_dst]
+        ml = jax.ops.segment_min(jnp.where(e1, flat_lab, S_sent), flat_dst, n)
+        e2 = e1 & (flat_lab == ml[flat_dst])
+        ms = jax.ops.segment_min(jnp.where(e2, flat_src, S_sent), flat_dst, n)
+        upd = jnp.isfinite(m) & (
+            (m < st.dist)
+            | ((m == st.dist) & (ml < st.lab))
+            | ((m == st.dist) & (ml == st.lab) & (ms < st.pred))
+        )
+        new = VoronoiState(
+            dist=jnp.where(upd, m, st.dist),
+            lab=jnp.where(upd, ml, st.lab),
+            pred=jnp.where(upd, ms, st.pred),
+        )
+        # rows of updated vertices become dirty again
+        dirty = dirty | upd[ell.row2v]
+        rlx = rlx + jnp.sum(upd).astype(jnp.float32)
+        msg = msg + jnp.sum(jnp.isfinite(flat_cand)).astype(jnp.float32)
+        return (new, dirty, it + 1, rlx, msg)
+
+    def cond(carry):
+        _, dirty, it, _, _ = carry
+        return jnp.any(dirty) & (it < cap)
+
+    st, _, iters, rlx, msg = jax.lax.while_loop(
+        cond, body, (st0, dirty0, jnp.int32(0), 0.0, 0.0)
+    )
+    return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)

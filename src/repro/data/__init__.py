@@ -1,0 +1,1 @@
+"""Synthetic data pipelines: weighted graphs (RMAT), LM tokens, recsys events."""

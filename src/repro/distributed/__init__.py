@@ -1,0 +1,5 @@
+"""Distribution utilities: sharding rules, gradient compression."""
+
+from repro.distributed.sharding import named_sharding, sanitize_spec
+
+__all__ = ["named_sharding", "sanitize_spec"]

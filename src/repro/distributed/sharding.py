@@ -1,0 +1,54 @@
+"""Divisibility-aware sharding construction.
+
+GSPMD requires explicit input shardings to divide the dimension evenly.
+``sanitize_spec`` drops any mesh axis whose size doesn't divide the
+corresponding dimension (falling back to replication for that dim) so odd
+dimensions — granite's 49155 vocab, Cora's 2708 nodes — never hard-fail a
+lowering. Large irregular dims should instead be *padded* upstream (the
+LM configs pad vocab to a multiple of 256; the GNN cells pad N/E to 512).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    size = 1
+    for a in entry:
+        size *= mesh.shape[a]
+    return size
+
+
+def sanitize_spec(mesh, shape: Sequence[int], spec: Sequence) -> P:
+    """Returns a PartitionSpec with non-dividing axes dropped per-dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        if shape[i] % _axes_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            # try single axes out of a tuple before giving up
+            if isinstance(entry, (tuple, list)):
+                kept = None
+                for a in entry:
+                    if shape[i] % mesh.shape[a] == 0:
+                        kept = a
+                        break
+                out.append(kept)
+            else:
+                out.append(None)
+    return P(*out)
+
+
+def named_sharding(mesh, shape: Sequence[int], *spec) -> NamedSharding:
+    """NamedSharding(mesh, sanitize_spec(...)) convenience."""
+    return NamedSharding(mesh, sanitize_spec(mesh, shape, spec))

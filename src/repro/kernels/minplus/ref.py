@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the min-plus ELL relaxation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IMAX = jnp.iinfo(jnp.int32).max
+
+
+def minplus_ref(
+    nbr: jax.Array, wgt: jax.Array, dist: jax.Array, lab: jax.Array
+):
+    """Row-wise lexicographic min of (dist[nbr]+wgt, lab[nbr], nbr)."""
+    cand = dist[nbr].astype(jnp.float32) + wgt.astype(jnp.float32)
+    l = jnp.where(jnp.isfinite(cand), lab[nbr], IMAX)
+    s = jnp.where(jnp.isfinite(cand), nbr, IMAX)
+    m = jnp.min(cand, axis=1)
+    e1 = cand == m[:, None]
+    ml = jnp.min(jnp.where(e1, l, IMAX), axis=1)
+    e2 = e1 & (l == ml[:, None])
+    ms = jnp.min(jnp.where(e2, s, IMAX), axis=1)
+    return m, ml, ms

@@ -1,0 +1,38 @@
+"""Public jit'd wrapper for the bucketed segment-min kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segmin.segmin import segmin_bucketed_call
+
+
+@functools.partial(jax.jit, static_argnames=("vb", "edge_block", "interpret"))
+def segmin_bucketed(
+    cand: jax.Array,
+    ldst: jax.Array,
+    lab: jax.Array,
+    src: jax.Array,
+    *,
+    vb: int,
+    edge_block: int = 512,
+    interpret: bool = True,
+):
+    """Lexicographic (cand, lab, src) segment-min over bucketed edges.
+
+    Pads EB up to a multiple of ``edge_block`` with inert +inf lanes, then
+    dispatches the Pallas kernel. See ``segmin.py`` for the tile contract.
+    """
+    NB, EB = cand.shape
+    pad = (-EB) % edge_block
+    if pad:
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        ldst = jnp.pad(ldst, ((0, 0), (0, pad)))
+        lab = jnp.pad(lab, ((0, 0), (0, pad)))
+        src = jnp.pad(src, ((0, 0), (0, pad)))
+    return segmin_bucketed_call(
+        cand, ldst, lab, src, vb=vb, edge_block=edge_block, interpret=interpret
+    )

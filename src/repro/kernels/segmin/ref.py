@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the bucketed segment-min kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IMAX = jnp.iinfo(jnp.int32).max
+
+
+def segmin_bucketed_ref(
+    cand: jax.Array, ldst: jax.Array, lab: jax.Array, src: jax.Array, vb: int
+):
+    """Per-bucket lexicographic segment-min via jax.ops.segment_min."""
+    NB, EB = cand.shape
+    c = cand.astype(jnp.float32)
+    # offset local ids per bucket to reduce in one flat pass
+    seg = (ldst + jnp.arange(NB, dtype=jnp.int32)[:, None] * vb).reshape(-1)
+    cf = c.reshape(-1)
+    lf = jnp.where(jnp.isfinite(cf), lab.reshape(-1), IMAX)
+    sf = jnp.where(jnp.isfinite(cf), src.reshape(-1), IMAX)
+    m = jax.ops.segment_min(cf, seg, NB * vb)
+    e1 = cf == m[seg]
+    ml = jax.ops.segment_min(jnp.where(e1, lf, IMAX), seg, NB * vb)
+    e2 = e1 & (lf == ml[seg])
+    ms = jax.ops.segment_min(jnp.where(e2, sf, IMAX), seg, NB * vb)
+    return (
+        m.reshape(NB, vb),
+        ml.reshape(NB, vb),
+        ms.reshape(NB, vb),
+    )

@@ -1,0 +1,9 @@
+"""Assigned architecture zoo: LM transformers, GNNs, RecSys (MIND).
+
+Functional JAX (no framework): each family module exposes
+
+  init_params(cfg, rng, ...)          real parameters (smoke/examples)
+  param_specs(cfg, mesh, ...)         ShapeDtypeStructs + shardings (dry-run)
+  input_specs(cfg, shape, mesh)       input ShapeDtypeStructs per cell
+  loss_fn / *_step                    the jittable computations
+"""

@@ -1,0 +1,490 @@
+"""GNN family: GraphSAGE, GatedGCN, SchNet, GraphCast.
+
+All four share the same message-passing substrate as the Steiner core:
+edge-index gather → per-edge message → ``jax.ops.segment_sum/max`` scatter
+(JAX has no CSR SpMM; segment ops over an edge list ARE the system here,
+exactly like the Voronoi relaxation). Graph tensors are padded/static:
+
+  nodes:  x (N, F)          edges: (E, 2) int32 src/dst, mask via weight/feat
+  sampled minibatch (GraphSAGE shape): fixed fanout index tensors
+  molecule batch: (G, n, f) dense small graphs with an (E, 2) edge template
+
+Distribution: edges sharded over "data", node features sharded over "data"
+rows with feature dim over "model" where divisible; XLA turns the segment
+ops into sharded scatter-adds.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, ShapeSpec
+
+
+def seg_mean(msg, dst, n):
+    s = jax.ops.segment_sum(msg, dst, n)
+    c = jax.ops.segment_sum(jnp.ones((msg.shape[0], 1), msg.dtype), dst, n)
+    return s / jnp.maximum(c, 1.0)
+
+
+def _dense(key, din, dout, dtype):
+    return {
+        "w": (key, (din, dout), dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Parameter tables (same init/spec duality as the transformer)
+# ----------------------------------------------------------------------------
+
+
+def param_defs(cfg: GNNConfig, d_feat: int) -> Dict[str, tuple]:
+    dt = cfg.jdtype
+    h = cfg.d_hidden
+    defs: Dict[str, tuple] = {}
+
+    def lin(name, din, dout, spec=(None, "model")):
+        defs[name] = ((din, dout), dt, spec)
+
+    if cfg.kind == "sage":
+        din = d_feat
+        for i in range(cfg.n_layers):
+            lin(f"l{i}.self", din, h)
+            lin(f"l{i}.nbr", din, h)
+            din = h
+        lin("out", h, cfg.n_classes, (None, None))
+    elif cfg.kind == "gatedgcn":
+        lin("enc", d_feat, h)
+        lin("enc_e", 1, h, (None, None))
+        for i in range(cfg.n_layers):
+            for nm in ("A", "B", "D", "E", "U", "V"):
+                lin(f"l{i}.{nm}", h, h)
+            defs[f"l{i}.ln_n"] = ((h,), dt, (None,))
+            defs[f"l{i}.ln_e"] = ((h,), dt, (None,))
+        lin("out", h, cfg.n_classes, (None, None))
+    elif cfg.kind == "schnet":
+        lin("embed", d_feat, h, (None, None))
+        for i in range(cfg.n_interactions):
+            lin(f"i{i}.filter1", cfg.rbf, h, (None, None))
+            lin(f"i{i}.filter2", h, h)
+            lin(f"i{i}.in", h, h)
+            lin(f"i{i}.out1", h, h)
+            lin(f"i{i}.out2", h, h)
+        lin("head1", h, h)
+        lin("head2", h, 1, (None, None))
+    elif cfg.kind == "graphcast":
+        lin("enc_grid", d_feat, h)
+        lin("enc_g2m", 4, h, (None, None))
+        lin("enc_mesh", 4, h, (None, None))
+        lin("enc_m2g", 4, h, (None, None))
+        for i in range(cfg.n_layers):
+            lin(f"p{i}.edge1", 3 * h, h)
+            lin(f"p{i}.edge2", h, h)
+            lin(f"p{i}.node1", 2 * h, h)
+            lin(f"p{i}.node2", h, h)
+        lin("g2m_edge", 3 * h, h)
+        lin("m2g_edge", 3 * h, h)
+        lin("g2m_node", 2 * h, h)
+        lin("m2g_node", 2 * h, h)
+        lin("dec1", h, h)
+        lin("dec2", h, cfg.n_vars, (None, None))
+    else:
+        raise ValueError(cfg.kind)
+    return defs
+
+
+def _nest(flat):
+    out: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split(".")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def param_specs(cfg: GNNConfig, d_feat: int, mesh):
+    from repro.distributed import named_sharding
+
+    flat = {}
+    for k, (shape, dt, spec) in param_defs(cfg, d_feat).items():
+        flat[k] = jax.ShapeDtypeStruct(
+            shape, dt, sharding=named_sharding(mesh, shape, *spec)
+        )
+    return _nest(flat)
+
+
+def init_params(cfg: GNNConfig, d_feat: int, rng):
+    flat = {}
+    defs = param_defs(cfg, d_feat)
+    keys = jax.random.split(rng, len(defs))
+    for key, (name, (shape, dt, _)) in zip(keys, sorted(defs.items())):
+        if name.endswith(("ln_n", "ln_e")):
+            flat[name] = jnp.ones(shape, dt)
+        else:
+            flat[name] = (
+                jax.random.normal(key, shape, jnp.float32) * (shape[0] ** -0.5)
+            ).astype(dt)
+    return _nest(flat)
+
+
+# ----------------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------------
+
+
+
+def _cons(x, spec):
+    """Sharding-constraint hint; skipped when spec is None."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def make_specs(dp_axes, h):
+    """(node_spec, edge_spec) for message passing.
+
+    Node tensors keep FULL rows but shard the feature dim over "model"
+    (the 2D-SpMV decomposition: gathers/scatters stay row-global but only
+    1/TP of each row lives per device); edge tensors shard rows over dp
+    and features over "model". Falls back when h doesn't divide.
+    """
+    if not dp_axes:
+        return None, None
+    from jax.sharding import PartitionSpec as _P
+
+    # Edge tensors: rows over EVERY mesh axis (edge MLPs contract the full
+    # feature dim anyway, so feature-sharding edges just forces gathers —
+    # row-sharding 256-way keeps the (E, 3h) message concat ~1.5GB/device
+    # at ogb_products scale). Node tensors: full rows, features over
+    # "model" when divisible (2D-SpMV), else replicated (gatedgcn's 70).
+    espec = _P((*dp_axes, "model"), None)
+    nspec = _P(dp_axes, "model") if h % 16 == 0 else _P(dp_axes, None)
+    return nspec, espec
+
+
+def sage_forward_full(cfg, params, x, edges, dp_axes=()):
+    """Full-graph GraphSAGE (mean aggregator)."""
+    n = x.shape[0]
+    nspec, espec = make_specs(dp_axes, cfg.d_hidden)
+    src, dst = edges[:, 0], edges[:, 1]
+    h = x
+
+    def layer(h, p):
+        nbr = _cons(seg_mean(_cons(h[src], espec), dst, n), nspec)
+        h = jax.nn.relu(h @ p["self"] + nbr @ p["nbr"])
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+        return _cons(h, nspec)
+
+    for i in range(cfg.n_layers):
+        h = jax.checkpoint(layer)(h, params[f"l{i}"])
+    return h @ params["out"]
+
+
+def sage_forward_sampled(cfg, params, feats: Tuple[jax.Array, ...]):
+    """Fanout-sampled GraphSAGE: feats[k] = (B·prod(fanout[:k]), F)."""
+    depth = cfg.n_layers
+    hs = list(feats)  # hop 0 = batch nodes, hop k = sampled neighbors
+    for i in range(depth):
+        p = params[f"l{i}"]
+        new = []
+        for hop in range(depth - i):
+            cur = hs[hop]
+            nxt = hs[hop + 1].reshape(cur.shape[0], -1, hs[hop + 1].shape[-1])
+            nbr = jnp.mean(nxt, axis=1)
+            h = jax.nn.relu(cur @ p["self"] + nbr @ p["nbr"])
+            h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+            new.append(h)
+        hs = new
+    return hs[0] @ params["out"]
+
+
+def gatedgcn_forward(cfg, params, x, edges, ew, dp_axes=()):
+    """GatedGCN [arXiv:2003.00982]: edge-gated mean aggregation."""
+    n = x.shape[0]
+    nspec, espec = make_specs(dp_axes, cfg.d_hidden)
+    src, dst = edges[:, 0], edges[:, 1]
+    h = _cons(x @ params["enc"], nspec)
+    e = _cons(ew[:, None] @ params["enc_e"], espec)
+
+    def layer(carry, p):
+        h, e = carry
+        hs = _cons(h[src], espec)
+        hd = _cons(h[dst], espec)
+        eh = e @ p["D"] + hs @ p["E"] + hd @ p["V"]
+        e_new = _cons(e + jax.nn.relu(_ln(eh, p["ln_e"])), espec)
+        gate = jax.nn.sigmoid(e_new)
+        msg = gate * (hs @ p["B"])
+        den = _cons(jax.ops.segment_sum(gate, dst, n), nspec) + 1e-6
+        agg = _cons(jax.ops.segment_sum(msg, dst, n), nspec) / den
+        h_new = h + jax.nn.relu(_ln(h @ p["A"] + agg @ p["U"], p["ln_n"]))
+        # bf16 edge-feature carry: the 62M-edge cells store L of these
+        return (_cons(h_new, nspec), e_new.astype(jnp.bfloat16).astype(e.dtype))
+
+    for i in range(cfg.n_layers):
+        h, e = jax.checkpoint(layer)((h, e), params[f"l{i}"])
+    return h @ params["out"]
+
+
+def _ln(x, scale, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def schnet_forward(cfg, params, z_feat, pos, edges, dp_axes=()):
+    """SchNet [arXiv:1706.08566]: continuous-filter convolutions.
+
+    z_feat: (N, F) atom-type features; pos: (N, 3); edges: (E, 2).
+    Returns per-graph scalar if nodes belong to one graph (sum-pooled).
+    """
+    n = z_feat.shape[0]
+    nspec, espec = make_specs(dp_axes, cfg.d_hidden)
+    src, dst = edges[:, 0], edges[:, 1]
+    h = _cons(z_feat @ params["embed"], nspec)
+    d = jnp.linalg.norm(pos[src] - pos[dst] + 1e-9, axis=-1)  # (E,)
+    mu = jnp.linspace(0.0, cfg.cutoff, cfg.rbf, dtype=h.dtype)
+    gamma = 10.0 / cfg.cutoff
+    rbf = jnp.exp(-gamma * jnp.square(d[:, None] - mu[None, :]))  # (E, rbf)
+    # smooth cutoff
+    fcut = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cfg.cutoff, 0, 1)) + 1.0)
+    def interaction(h, p):
+        wfil = _cons(jax.nn.softplus(rbf @ p["filter1"]) @ p["filter2"], espec)
+        wfil = wfil * fcut[:, None]
+        m = _cons((h @ p["in"])[src], espec) * wfil
+        agg = _cons(jax.ops.segment_sum(m, dst, n), nspec)
+        return h + jax.nn.softplus(agg @ p["out1"]) @ p["out2"]
+
+    for i in range(cfg.n_interactions):
+        h = jax.checkpoint(interaction)(h, params[f"i{i}"])
+    e_atom = jax.nn.softplus(h @ params["head1"]) @ params["head2"]
+    return jnp.sum(e_atom)
+
+
+def graphcast_forward(cfg, params, grid_x, g2m, mesh_e, m2g, n_mesh, dp_axes=()):
+    """GraphCast-style encode-process-decode [arXiv:2212.12794].
+
+    grid_x: (Ng, F); g2m/m2g/mesh_e: (E?, 2) index pairs + implicit unit
+    edge features; n_mesh: mesh node count. Returns (Ng, n_vars).
+    """
+    ng = grid_x.shape[0]
+    nspec, espec = make_specs(dp_axes, cfg.d_hidden)
+    h_grid = jax.nn.relu(_cons(grid_x @ params["enc_grid"], nspec))
+    hdim = h_grid.shape[-1]
+
+    def efeat(e, n_src_nodes):
+        # cheap structural edge features (degree-free): normalized ids
+        f = jnp.stack(
+            [
+                e[:, 0].astype(h_grid.dtype) / max(n_src_nodes, 1),
+                e[:, 1].astype(h_grid.dtype) / max(n_mesh, 1),
+                jnp.ones((e.shape[0],), h_grid.dtype),
+                jnp.zeros((e.shape[0],), h_grid.dtype),
+            ],
+            axis=-1,
+        )
+        return f
+
+    # --- encode grid → mesh (checkpointed: 62M-edge intermediates are
+    # recomputed in backward, never saved)
+    def encode(h_grid):
+        he = _cons(jax.nn.relu(efeat(g2m, ng) @ params["enc_g2m"]), espec)
+        msg = jax.nn.relu(
+            _cons(
+                jnp.concatenate([_cons(h_grid[g2m[:, 0]], espec), he, he], axis=-1)
+                @ params["g2m_edge"],
+                espec,
+            )
+        )
+        h_mesh = _cons(jax.ops.segment_sum(msg, g2m[:, 1], n_mesh), nspec)
+        return jax.nn.relu(
+            jnp.concatenate([h_mesh, h_mesh], axis=-1) @ params["g2m_node"]
+        )
+
+    h_mesh = jax.checkpoint(encode)(h_grid)
+    # --- process on mesh
+    e_h = _cons(jax.nn.relu(efeat(mesh_e, n_mesh) @ params["enc_mesh"]), espec)
+
+    def processor(carry, p):
+        h_mesh, e_h = carry
+        em = jnp.concatenate(
+            [e_h, _cons(h_mesh[mesh_e[:, 0]], espec), _cons(h_mesh[mesh_e[:, 1]], espec)],
+            -1,
+        )
+        e_h = _cons(e_h + jax.nn.relu(jax.nn.relu(em @ p["edge1"]) @ p["edge2"]), espec)
+        agg = _cons(jax.ops.segment_sum(e_h, mesh_e[:, 1], n_mesh), nspec)
+        nm = jnp.concatenate([h_mesh, agg], axis=-1)
+        h_mesh = _cons(
+            h_mesh + jax.nn.relu(jax.nn.relu(nm @ p["node1"]) @ p["node2"]), nspec
+        )
+        return h_mesh, e_h
+
+    for i in range(cfg.n_layers):
+        h_mesh, e_h = jax.checkpoint(processor)((h_mesh, e_h), params[f"p{i}"])
+    # --- decode mesh → grid (checkpointed like encode)
+    def decode(h_mesh, h_grid):
+        he2 = _cons(jax.nn.relu(efeat(m2g, n_mesh) @ params["enc_m2g"]), espec)
+        msg2 = jax.nn.relu(
+            _cons(
+                jnp.concatenate([_cons(h_mesh[m2g[:, 0]], espec), he2, he2], -1)
+                @ params["m2g_edge"],
+                espec,
+            )
+        )
+        h_out = _cons(jax.ops.segment_sum(msg2, m2g[:, 1], ng), nspec)
+        h_out = jax.nn.relu(
+            jnp.concatenate([h_grid, h_out], -1) @ params["m2g_node"]
+        )
+        return jax.nn.relu(h_out @ params["dec1"]) @ params["dec2"]
+
+    return jax.checkpoint(decode)(h_mesh, h_grid)
+
+
+# ----------------------------------------------------------------------------
+# Per-cell losses + input specs
+# ----------------------------------------------------------------------------
+
+
+def effective_graph(shape: ShapeSpec) -> Tuple[int, int, int]:
+    """(N, E, F) of the concrete graph a cell runs on.
+
+    gnn_sampled → the sampled k-hop subgraph (disjoint-union form for
+    non-SAGE archs); gnn_batched → the disjoint union of the molecule
+    batch. gnn_full → as given.
+    """
+    def pad(x):  # pad to 512 for even (pod×)data×model sharding
+        return -(-x // 512) * 512
+
+    if shape.kind == "gnn_sampled":
+        b = shape.batch_nodes
+        f1, f2 = shape.fanout
+        return pad(b * (1 + f1 + f1 * f2)), pad(b * f1 + b * f1 * f2), shape.d_feat
+    if shape.kind == "gnn_batched":
+        g = shape.graph_batch
+        return pad(g * shape.n_nodes), pad(g * shape.n_edges), shape.d_feat
+    return pad(shape.n_nodes), pad(shape.n_edges), shape.d_feat
+
+
+def make_train_step(cfg: GNNConfig, shape: ShapeSpec, opt_cfg, dp_axes=()):
+    """Returns train_step(params, opt_state, batch) for the given cell."""
+    from repro.optim import adamw_update
+
+    def loss(params, batch):
+        if cfg.kind == "sage" and shape.kind == "gnn_sampled":
+            logits = sage_forward_sampled(cfg, params, batch["feats"])
+            lab = batch["labels"]
+        elif cfg.kind == "sage":
+            logits = sage_forward_full(
+                cfg, params, batch["x"], batch["edges"], dp_axes
+            )
+            lab = batch["labels"]
+        elif cfg.kind == "gatedgcn":
+            logits = gatedgcn_forward(
+                cfg, params, batch["x"], batch["edges"], batch["ew"], dp_axes
+            )
+            lab = batch["labels"]
+        elif cfg.kind == "schnet":
+            if shape.kind == "gnn_batched":
+                e = jax.vmap(
+                    lambda z, p: schnet_forward(cfg, params, z, p, batch["edges_t"])
+                )(batch["z"], batch["pos"])
+                return jnp.mean(jnp.square(e - batch["energy"]))
+            e = schnet_forward(
+                cfg, params, batch["x"], batch["pos"], batch["edges"], dp_axes
+            )
+            return jnp.square(e - batch["energy_sum"])
+        elif cfg.kind == "graphcast":
+            out = graphcast_forward(
+                cfg,
+                params,
+                batch["x"],
+                batch["g2m"],
+                batch["mesh_e"],
+                batch["m2g"],
+                n_mesh=batch["x"].shape[0] // 4 + 1,
+                dp_axes=dp_axes,
+            )
+            return jnp.mean(jnp.square(out - batch["target"]))
+        else:
+            raise ValueError(cfg.kind)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -jnp.mean(jnp.take_along_axis(logp, lab[:, None], axis=1))
+
+    def train_step(params, opt_state, batch):
+        l, g = jax.value_and_grad(loss)(params, batch)
+        params, opt_state = adamw_update(params, g, opt_state, opt_cfg)
+        return params, opt_state, l
+
+    return train_step
+
+
+def input_specs(cfg: GNNConfig, shape: ShapeSpec, mesh, dp_axes=("data",)):
+    """Input ShapeDtypeStructs per GNN cell (see DESIGN.md §GNN-cells)."""
+    from repro.distributed import named_sharding
+
+    dt = cfg.jdtype
+    rep = NamedSharding(mesh, P())
+
+    def arr(shape_, dtype, sh=None):
+        if sh is None:
+            sh = named_sharding(mesh, shape_, dp_axes, *([None] * (len(shape_) - 1)))
+        return jax.ShapeDtypeStruct(shape_, dtype, sharding=sh)
+
+    N, E, F = effective_graph(shape)
+    if cfg.kind == "sage" and shape.kind == "gnn_sampled":
+        B = shape.batch_nodes
+        f1, f2 = shape.fanout
+        return {
+            "feats": (
+                arr((B, F), dt),
+                arr((B * f1, F), dt),
+                arr((B * f1 * f2, F), dt),
+            ),
+            "labels": arr((B,), jnp.int32),
+        }
+    if cfg.kind == "sage":
+        return {
+            "x": arr((N, F), dt),
+            "edges": arr((E, 2), jnp.int32),
+            "labels": arr((N,), jnp.int32),
+        }
+    if cfg.kind == "gatedgcn":
+        return {
+            "x": arr((N, F), dt),
+            "edges": arr((E, 2), jnp.int32),
+            "ew": arr((E,), dt),
+            "labels": arr((N,), jnp.int32),
+        }
+    if cfg.kind == "schnet":
+        if shape.kind == "gnn_batched":
+            G = shape.graph_batch
+            n1, e1 = shape.n_nodes, shape.n_edges  # per molecule
+            return {
+                "z": arr((G, n1, F), dt),
+                "pos": arr((G, n1, 3), dt),
+                "edges_t": arr((e1, 2), jnp.int32, rep),
+                "energy": arr((G,), dt),
+            }
+        return {
+            "x": arr((N, F), dt),
+            "pos": arr((N, 3), dt),
+            "edges": arr((E, 2), jnp.int32),
+            "energy_sum": arr((), dt, rep),
+        }
+    if cfg.kind == "graphcast":
+        n_mesh = N // 4 + 1
+        em = min(E, 8 * n_mesh)
+        return {
+            "x": arr((N, F), dt),
+            "g2m": arr((E, 2), jnp.int32),
+            "mesh_e": arr((em, 2), jnp.int32),
+            "m2g": arr((E, 2), jnp.int32),
+            "target": arr((N, cfg.n_vars), dt),
+        }
+    raise ValueError((cfg.kind, shape.kind))

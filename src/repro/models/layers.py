@@ -1,0 +1,404 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/MLA attention, MoE.
+
+Everything is written against *global* array shapes; distribution comes
+from pjit + NamedSharding on parameters/inputs plus a few
+``with_sharding_constraint`` hints. Attention uses a KV-chunked online
+softmax (Rabe–Staats) so the 32K-prefill cells never materialize an
+S×S score matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # f32 accumulation WITHOUT materializing an f32 copy of x (the einsum
+    # reduces directly; a jnp.square(x.astype(f32)) temp doubles activation
+    # memory across remat).
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    var = (ss / x.shape[-1])[..., None]
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., :, None, None] * freqs  # (..,S,1,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Chunked (online-softmax) attention — the memory-efficient prefill/train path
+# ----------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention, scanning KV chunks (no S×S buffer).
+
+    GQA: Hq must be a multiple of Hkv; KV heads are broadcast.
+    ``q_offset`` is the absolute position of q[0] (decode: cache length).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    g = Hq // Hkv
+    sc = scale if scale is not None else D ** -0.5
+    nchunks = -(-Sk // kv_chunk)
+    pad = nchunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, kv_chunk, Hkv, D)
+    vc = v.reshape(B, nchunks, kv_chunk, Hkv, Dv)
+    qh = q.reshape(B, Sq, Hkv, g, D)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, cidx = inp
+        kpos = cidx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qh, kblk).astype(jnp.float32) * sc
+        mask = kpos[None, None, None, None, :] < Sk  # padding
+        if causal:
+            mask = mask & (
+                kpos[None, None, None, None, :] <= qpos[None, :, None, None, None]
+            )
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf) against NaNs
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgk,bkhe->bqhge", p.astype(v.dtype), vblk)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, g), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, g, Dv), v.dtype)
+    xs = (
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.arange(nchunks),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.reshape(B, Sq, Hq, Dv)
+
+
+# ----------------------------------------------------------------------------
+# GQA attention block (dense archs) — params as dict pytrees
+# ----------------------------------------------------------------------------
+
+
+def gqa_attention(
+    cfg: LMConfig,
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,
+    *,
+    kv_cache: Optional[tuple] = None,  # (k, v[, scales]) running cache
+    cache_len: int | jax.Array = 0,
+    kv_chunk: int = 1024,
+):
+    """Returns (out, new_kv_cache). Cache layout: (B, Smax, Hkv, D)."""
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        out = chunked_attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+        new_cache = (k, v)
+    else:
+        out, new_cache = _attend_with_cache(cfg, q, k, v, kv_cache, cache_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def _quant_int8(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization of KV entries.
+
+    Scales are bf16: the extra ≤0.4% relative error is far below the int8
+    rounding error and halves the scale-array HBM (which at 32K context ×
+    batch 128 is gigabytes per device).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    qx = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return qx, scale.astype(jnp.bfloat16)
+
+
+def _dequant_int8(qx: jax.Array, scale: jax.Array, dtype):
+    return (qx.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _attend_with_cache(cfg: LMConfig, q, k_new, v_new, cache, cache_len,
+                       kv_chunk: int = 2048):
+    """Decode path: insert new KV at ``cache_len``, attend over the cache.
+
+    The int8 cache is dequantized PER CHUNK inside an online-softmax scan —
+    the full-precision cache copy is never materialized (which would
+    otherwise triple decode HBM at 32K context).
+    """
+    B, S, Hkv, hd = k_new.shape
+    if cfg.kv_quant_int8:
+        kq, ks, vq, vs = cache
+        knq, kns = _quant_int8(k_new)
+        vnq, vns = _quant_int8(v_new)
+        kq = jax.lax.dynamic_update_slice_in_dim(kq, knq, cache_len, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(ks, kns, cache_len, axis=1)
+        vq = jax.lax.dynamic_update_slice_in_dim(vq, vnq, cache_len, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(vs, vns, cache_len, axis=1)
+        out = _decode_attention_q8(q, kq, ks, vq, vs, cache_len + S, kv_chunk)
+        return out, (kq, ks, vq, vs)
+    kc, vc = cache
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, cache_len, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, cache_len, axis=1)
+    out = _masked_decode_attention(q, kc, vc, cache_len + S)
+    return out, (kc, vc)
+
+
+def _decode_attention_q8(q, kq, ks, vq, vs, valid_len, kv_chunk):
+    """Online-softmax over int8 cache chunks (dequant inside the scan)."""
+    B, Sq, Hq, D = q.shape
+    _, Smax, Hkv, _ = kq.shape
+    g = Hq // Hkv
+    qh = q.reshape(B, Sq, Hkv, g, D)
+    kv_chunk = min(kv_chunk, Smax)  # smoke-scale caches are tiny
+    assert Smax % kv_chunk == 0, (Smax, kv_chunk)
+    nch = Smax // kv_chunk
+
+    def step(carry, cidx):
+        m, l, acc = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, cidx * kv_chunk, kv_chunk, 1)
+        kblk = _dequant_int8(sl(kq), sl(ks), q.dtype)
+        vblk = _dequant_int8(sl(vq), sl(vs), q.dtype)
+        kpos = cidx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qh, kblk).astype(jnp.float32)
+        s = s * (D ** -0.5)
+        mask = kpos[None, None, None, None, :] < valid_len
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pr = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(pr, axis=-1)
+        pv = jnp.einsum("bqhgk,bkhe->bqhge", pr.astype(vblk.dtype), vblk)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, g), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, g, D), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nch))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def _masked_decode_attention(q, k, v, valid_len):
+    """Plain attention over a (B, Smax, Hkv, D) cache with a length mask."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = v.shape
+    g = Hq // Hkv
+    qh = q.reshape(B, Sq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qh, k).astype(jnp.float32) * (D ** -0.5)
+    pos = jnp.arange(Sk)
+    mask = pos[None, None, None, None, :] < valid_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bqhgk,bkhe->bqhge", p, v)
+    return out.reshape(B, Sq, Hq, Dv)
+
+
+# ----------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3): low-rank Q + compressed latent KV cache
+# ----------------------------------------------------------------------------
+
+
+def mla_attention(
+    cfg: LMConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    kv_cache: Optional[jax.Array] = None,  # (B, Smax, kv_lora + rope_dim)
+    cache_len: int | jax.Array = 0,
+    kv_chunk: int = 1024,
+):
+    """Multi-head Latent Attention [arXiv:2412.19437 §2.1].
+
+    The cache stores only the compressed latent c_kv (kv_lora_rank) and the
+    decoupled RoPE key (qk_rope_head_dim) — 576 floats/token for V3.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    # --- queries (low-rank)
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])  # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    # --- compressed KV latent + decoupled rope key
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])  # (B,S,kv_lora+dr)
+    ckv = rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = rope(ckv_full[..., cfg.kv_lora_rank :][:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]
+    latent = jnp.concatenate([ckv, k_rope], axis=-1)  # (B,S,rank+dr)
+
+    scale = (dn + dr) ** -0.5
+    if kv_cache is not None:
+        # --- absorbed decode [arXiv:2412.19437 §2.1]: score and attend in
+        # the LATENT space; per-head K/V are never expanded over the cache.
+        kv_cache = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache, latent.astype(kv_cache.dtype), cache_len, axis=1
+        )
+        lat_all = kv_cache.astype(x.dtype)
+        valid = cache_len + S
+        ckv_all = lat_all[..., : cfg.kv_lora_rank]  # (B, Smax, r)
+        kr_all = lat_all[..., cfg.kv_lora_rank :]  # (B, Smax, dr)
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wk_b"])
+        sc = (
+            jnp.einsum("bqhr,bsr->bqhs", q_abs, ckv_all)
+            + jnp.einsum("bqhd,bsd->bqhs", q_rope, kr_all)
+        ).astype(jnp.float32) * scale
+        pos_k = jnp.arange(lat_all.shape[1])
+        sc = jnp.where(pos_k[None, None, None, :] < valid, sc, -jnp.inf)
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        lat_out = jnp.einsum("bqhs,bsr->bqhr", pr, ckv_all)
+        out = jnp.einsum("bqhr,rhe->bqhe", lat_out, p["wv_b"])
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return y, kv_cache
+
+    # --- prefill/train: expand latent to per-head keys/values
+    ckv_all = latent[..., : cfg.kv_lora_rank]
+    kr_all = latent[..., cfg.kv_lora_rank :]
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_all, p["wk_b"])  # (B,Sk,H,dn)
+    v_all = jnp.einsum("bsr,rhk->bshk", ckv_all, p["wv_b"])  # (B,Sk,H,dv)
+    k_all = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (*k_nope.shape[:3], dr))],
+        axis=-1,
+    )
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(
+        qfull, k_all, v_all, causal=True, kv_chunk=kv_chunk, scale=scale
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, kv_cache
+
+
+# ----------------------------------------------------------------------------
+# FFN: SwiGLU dense + sort-free gather-based MoE dispatch
+# ----------------------------------------------------------------------------
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["w3"]
+    )
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def moe_ffn(cfg: LMConfig, p: dict, x: jax.Array, dp_axes: tuple = ()) -> jax.Array:
+    """Top-k MoE with shared experts — gather-only dispatch (no scatters).
+
+    Tokens are sorted by assigned expert (one global argsort); each expert
+    reads its slots by *gather*, computes, and tokens gather their results
+    back through the inverse permutation. Capacity = cf · T · k / E.
+
+    Sharding hints (when dp_axes given): token-major tensors stay sharded
+    over dp, expert-major tensors over "model" (EP) — XLA materializes the
+    dispatch/combine as all-to-alls instead of replicating intermediates.
+    """
+    from jax.sharding import PartitionSpec as _P
+
+    def tok_c(t):  # token-sharded constraint
+        if not dp_axes:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, _P(dp_axes, *([None] * (t.ndim - 1)))
+        )
+
+    def exp_c(t):  # expert-sharded constraint
+        if not dp_axes:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, _P("model", *([None] * (t.ndim - 1)))
+        )
+
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = tok_c(x.reshape(T, d))
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"]), axis=-1
+    )
+    topv, topi = jax.lax.top_k(gates, K)  # (T, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1).astype(jnp.int32)  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stk = flat_t[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(se, jnp.int32), se, E)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    raw = -(-int(cfg.capacity_factor * T * K) // E)  # ceil
+    C = max(8, -(-raw // 8) * 8)  # ≥8, lane-aligned
+
+    slot_idx = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (E,C)
+    slot_ok = jnp.arange(C, dtype=jnp.int32)[None, :] < counts[:, None]
+    tok = exp_c(jnp.where(slot_ok, stk[jnp.clip(slot_idx, 0, T * K - 1)], 0))
+    xin = exp_c(xt[tok] * slot_ok[..., None].astype(xt.dtype))  # (E, C, d)
+    h = exp_c(
+        jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["we1"]))
+        * jnp.einsum("ecd,edf->ecf", xin, p["we3"])
+    )
+    yslots = exp_c(jnp.einsum("ecf,efd->ecd", h, p["we2"]))  # (E, C, d)
+
+    # inverse permutation: where did flat slot (t, k) land?
+    iorder = jnp.argsort(order, stable=True)  # (T*K,)
+    pos = iorder - starts[flat_e]
+    in_cap = pos < C
+    gslot = jnp.clip(flat_e * C + pos, 0, E * C - 1)
+    ytk = tok_c(yslots.reshape(E * C, d)[gslot] * in_cap[:, None].astype(xt.dtype))
+    y = jnp.sum(
+        ytk.reshape(T, K, d) * topv[..., None].astype(xt.dtype), axis=1
+    )
+    if cfg.n_shared:
+        sh = jax.nn.silu(jnp.einsum("td,df->tf", xt, p["ws1"])) * jnp.einsum(
+            "td,df->tf", xt, p["ws3"]
+        )
+        y = y + jnp.einsum("tf,fd->td", sh, p["ws2"])
+    return y.reshape(B, S, d)

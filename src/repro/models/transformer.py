@@ -1,0 +1,517 @@
+"""Decoder-only LM family: dense (GQA), MLA, and MoE variants.
+
+One parameter-definition table drives both ``init_params`` (real arrays,
+smoke tests / examples) and ``param_specs`` (ShapeDtypeStructs + shardings,
+dry-run). Layers are stacked (leading L dim) and executed with
+``lax.scan`` + ``jax.checkpoint`` so the compiled HLO stays one-block-sized
+and activations are rematerialized.
+
+Sharding strategy (single-pod mesh ("data", "model")):
+  * TP over "model": attention heads (or head_dim when heads don't divide),
+    FFN hidden, vocab.
+  * ZeRO-3/FSDP over "data": every large weight also shards a remaining
+    dimension over "data"; XLA inserts the all-gathers.
+  * batch over ("pod",)+"data" on the multi-pod mesh; "pod" is pure DP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.models import layers as L
+from repro.optim import OptConfig, adamw_update
+
+
+# ----------------------------------------------------------------------------
+# Parameter definition table: {path: (shape, dtype, partition-spec)}
+# ----------------------------------------------------------------------------
+
+
+def _fsdp(spec: tuple, shape: tuple, data_size: int, axes=("data",)) -> tuple:
+    """Inserts the ZeRO axes at the first unsharded dim that divides.
+
+    ``axes=("pod", "data")`` extends ZeRO-3 across pods (cross-DCN weight
+    gathers) — required for >100B-param models whose state exceeds one
+    pod's HBM even fully sharded within the pod."""
+    spec = list(spec)
+    entry = axes[0] if len(axes) == 1 else tuple(axes)
+    for i, (s, sz) in enumerate(zip(spec, shape)):
+        if s is None and sz % data_size == 0 and sz >= data_size:
+            spec[i] = entry
+            return tuple(spec)
+    return tuple(spec)
+
+
+def param_defs(cfg: LMConfig, model_size: int, data_size: int,
+               fsdp_axes=("data",)) -> Dict[str, tuple]:
+    """Flat {path: (shape, dtype, spec)} table. Layer leaves get a leading
+    stacked dim later; specs here are per-layer."""
+    d, V = cfg.d_model, cfg.vocab_padded
+    H, Hkv, hd, f = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    dt = cfg.jdtype
+    head_ok = H % model_size == 0
+    kv_ok = Hkv % model_size == 0
+    defs: Dict[str, tuple] = {
+        "embed": ((V, d), dt, ("model", None)),
+        "final_norm": ((d,), dt, (None,)),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ((d, V), dt, (None, "model"))
+
+    def attn_defs(prefix: str):
+        if cfg.mla:
+            dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+            rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+            return {
+                f"{prefix}.wq_a": ((d, rq), dt, (None, "model")),
+                f"{prefix}.q_norm": ((rq,), dt, (None,)),
+                f"{prefix}.wq_b": ((rq, H, dn + dr), dt, (None, "model", None)),
+                f"{prefix}.wkv_a": ((d, rkv + dr), dt, (None, None)),
+                f"{prefix}.kv_norm": ((rkv,), dt, (None,)),
+                f"{prefix}.wk_b": ((rkv, H, dn), dt, (None, "model", None)),
+                f"{prefix}.wv_b": ((rkv, H, dv), dt, (None, "model", None)),
+                f"{prefix}.wo": ((H, dv, d), dt, ("model", None, None)),
+            }
+        qspec = (None, "model", None) if head_ok else (None, None, "model")
+        kvspec = (None, "model", None) if kv_ok else (None, None, "model")
+        out = {
+            f"{prefix}.wq": ((d, H, hd), dt, qspec),
+            f"{prefix}.wk": ((d, Hkv, hd), dt, kvspec),
+            f"{prefix}.wv": ((d, Hkv, hd), dt, kvspec),
+            f"{prefix}.wo": (
+                (H, hd, d),
+                dt,
+                ("model", None, None) if head_ok else (None, "model", None),
+            ),
+        }
+        if cfg.qkv_bias:
+            out[f"{prefix}.bq"] = ((H, hd), dt, qspec[1:])
+            out[f"{prefix}.bk"] = ((Hkv, hd), dt, kvspec[1:])
+            out[f"{prefix}.bv"] = ((Hkv, hd), dt, kvspec[1:])
+        return out
+
+    def dense_ffn_defs(prefix: str):
+        return {
+            f"{prefix}.w1": ((d, f), dt, (None, "model")),
+            f"{prefix}.w3": ((d, f), dt, (None, "model")),
+            f"{prefix}.w2": ((f, d), dt, ("model", None)),
+        }
+
+    def moe_ffn_defs(prefix: str):
+        E, fm = cfg.n_experts, cfg.moe_d_ff
+        out = {
+            f"{prefix}.router": ((d, E), jnp.float32, (None, None)),
+            f"{prefix}.we1": ((E, d, fm), dt, ("model", None, None)),
+            f"{prefix}.we2": ((E, fm, d), dt, ("model", None, None)),
+            f"{prefix}.we3": ((E, d, fm), dt, ("model", None, None)),
+        }
+        if cfg.n_shared:
+            fs = cfg.n_shared * fm
+            out[f"{prefix}.ws1"] = ((d, fs), dt, (None, "model"))
+            out[f"{prefix}.ws3"] = ((d, fs), dt, (None, "model"))
+            out[f"{prefix}.ws2"] = ((fs, d), dt, ("model", None))
+        return out
+
+    def block_defs(prefix: str, moe_block: bool):
+        out = {
+            f"{prefix}.ln1": ((d,), dt, (None,)),
+            f"{prefix}.ln2": ((d,), dt, (None,)),
+        }
+        out.update(attn_defs(f"{prefix}.attn"))
+        if moe_block:
+            out.update(moe_ffn_defs(f"{prefix}.ffn"))
+        else:
+            out.update(dense_ffn_defs(f"{prefix}.ffn"))
+        return out
+
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    if n_dense:
+        for k, (shape, dtv, spec) in block_defs("dense", False).items():
+            defs[k] = ((n_dense, *shape), dtv, (None, *spec))
+    if n_moe:
+        for k, (shape, dtv, spec) in block_defs("moe", True).items():
+            defs[k] = ((n_moe, *shape), dtv, (None, *spec))
+    # ZeRO-3 second-axis sharding on every big tensor
+    out = {}
+    for k, (shape, dtv, spec) in defs.items():
+        size = 1
+        for s in shape:
+            size *= s
+        if size >= (1 << 20):
+            spec = _fsdp(spec, shape, data_size, fsdp_axes)
+        out[k] = (shape, dtv, spec)
+    return out
+
+
+def _nest(flat: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split(".")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out
+
+
+def param_specs(cfg: LMConfig, mesh) -> Any:
+    from repro.distributed import named_sharding
+
+    msz = mesh.shape["model"]
+    dsz = mesh.shape["data"]
+    fsdp_axes = ("data",)
+    if "pod" in mesh.axis_names and cfg.params_count() > 1e11:
+        # cross-pod ZeRO: one pod's HBM cannot hold even the fully
+        # pod-sharded state of a 671B model (see DESIGN.md §Memory)
+        fsdp_axes = ("pod", "data")
+        dsz = dsz * mesh.shape["pod"]
+    defs = param_defs(cfg, msz, dsz, fsdp_axes)
+    flat = {
+        k: jax.ShapeDtypeStruct(shape, dt, sharding=named_sharding(mesh, shape, *spec))
+        for k, (shape, dt, spec) in defs.items()
+    }
+    return _nest(flat)
+
+
+def init_params(cfg: LMConfig, rng: jax.Array) -> Any:
+    """Real initialization (CPU smoke scale only)."""
+    defs = param_defs(cfg, 1, 1)
+    flat = {}
+    keys = jax.random.split(rng, len(defs))
+    for key, (name, (shape, dt, _)) in zip(keys, sorted(defs.items())):
+        if name.endswith(("ln1", "ln2", "final_norm", "q_norm", "kv_norm")):
+            flat[name] = jnp.ones(shape, dt)
+        elif name.endswith(("bq", "bk", "bv")):
+            flat[name] = jnp.zeros(shape, dt)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            flat[name] = (
+                jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+            ).astype(dt)
+    return _nest(flat)
+
+
+# ----------------------------------------------------------------------------
+# Forward / loss / steps
+# ----------------------------------------------------------------------------
+
+
+def _constrain(x, dp_axes, ndim_tail: int, *, seq_shard: bool = False):
+    """Residual-stream sharding hint; no-op when dp_axes is empty.
+
+    ``seq_shard`` = Megatron-style sequence parallelism: the (B, S, d)
+    stream between blocks is additionally sharded over "model" on S, so
+    remat-saved layer boundaries cost 1/TP of the memory. XLA inserts the
+    all-gather before attention/FFN and the reduce-scatter after.
+    """
+    if not dp_axes:
+        return x
+    if seq_shard and x.ndim >= 3:
+        return jax.lax.with_sharding_constraint(
+            x, P(dp_axes, "model", *([None] * (ndim_tail - 1)))
+        )
+    return jax.lax.with_sharding_constraint(
+        x, P(dp_axes, *([None] * ndim_tail))
+    )
+
+
+def _block(cfg: LMConfig, p: dict, x, positions, dp_axes, kv_chunk,
+           seq_shard: bool = False):
+    h, _ = (
+        L.mla_attention(cfg, p["attn"], L.rmsnorm(x, p["ln1"]), positions,
+                        kv_chunk=kv_chunk)
+        if cfg.mla
+        else L.gqa_attention(cfg, p["attn"], L.rmsnorm(x, p["ln1"]), positions,
+                             kv_chunk=kv_chunk)
+    )
+    x = x + h
+    y = L.rmsnorm(x, p["ln2"])
+    ffn = (
+        L.moe_ffn(cfg, p["ffn"], y, dp_axes)
+        if "router" in p["ffn"]
+        else L.swiglu(p["ffn"], y)
+    )
+    x = x + ffn
+    return _constrain(x, dp_axes, 2, seq_shard=seq_shard)
+
+
+def forward(
+    cfg: LMConfig,
+    params: Any,
+    tokens: jax.Array,
+    *,
+    dp_axes: Tuple[str, ...] = ("data",),
+    kv_chunk: int = 1024,
+    seq_shard: bool = False,
+    last_only: bool = False,
+    unroll: bool = False,
+) -> jax.Array:
+    """Training/eval forward → logits (B, S, V); (B, 1, V) if last_only.
+
+    ``unroll=True`` fully unrolls the layer scan — used by the roofline
+    cost calibration (XLA cost analysis never multiplies while-loop trip
+    counts, so scanned bodies must be materialized to be counted)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.jdtype)
+    x = _constrain(x, dp_axes, 2, seq_shard=seq_shard)
+
+    def scan_blocks(x, stacked):
+        def body(carry, lp):
+            return (
+                jax.checkpoint(
+                    lambda c, q: _block(
+                        cfg, q, c, positions, dp_axes, kv_chunk, seq_shard
+                    )
+                )(carry, lp),
+                None,
+            )
+
+        x, _ = jax.lax.scan(body, x, stacked, unroll=True if unroll else 1)
+        return x
+
+    if "dense" in params:
+        x = scan_blocks(x, params["dense"])
+    if "moe" in params:
+        x = scan_blocks(x, params["moe"])
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(x, params["final_norm"])
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if dp_axes:  # vocab-sharded logits: never a replicated (B,S,V) buffer
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(dp_axes, None, "model")
+        )
+    return logits
+
+
+def loss_fn(cfg, params, tokens, dp_axes=("data",), kv_chunk=1024,
+            seq_shard=False, unroll=False):
+    """Causal next-token cross-entropy (mean over B·(S-1))."""
+    logits = forward(cfg, params, tokens, dp_axes=dp_axes, kv_chunk=kv_chunk,
+                     seq_shard=seq_shard, unroll=unroll)
+    logits = logits[:, :-1].astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:  # mask pad columns out of the softmax
+        col = jnp.arange(cfg.vocab_padded)
+        logits = jnp.where(col[None, None, :] < cfg.vocab, logits, -jnp.inf)
+    labels = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def make_train_step(cfg: LMConfig, opt_cfg: OptConfig, dp_axes=("data",),
+                    kv_chunk: int = 1024, grad_accum: int = 1,
+                    seq_shard: bool = False, param_shardings=None,
+                    unroll: bool = False):
+    """One optimizer step; ``grad_accum`` splits the global batch into
+    sequential microbatches (activation memory ∝ 1/grad_accum).
+
+    ``param_shardings``: pytree of NamedShardings; constrains the
+    accumulated-gradient scan carry (without it XLA may replicate the
+    gradient buffer — fatal at 671B params)."""
+
+    def _gshard(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda t, sh: jax.lax.with_sharding_constraint(t, sh),
+            tree,
+            param_shardings,
+        )
+
+    def train_step(params, opt_state, tokens):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, tokens, dp_axes, kv_chunk, seq_shard,
+                                  unroll)
+            )(params)
+        else:
+            B = tokens.shape[0]
+            assert B % grad_accum == 0, (B, grad_accum)
+            micro = tokens.reshape(grad_accum, B // grad_accum, tokens.shape[1])
+
+            def acc_body(carry, mtok):
+                loss_a, grads_a = carry
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mtok, dp_axes, kv_chunk, seq_shard)
+                )(params)
+                grads_a = _gshard(jax.tree.map(jnp.add, grads_a, g))
+                return (loss_a + l, grads_a), None
+
+            zeros = _gshard(jax.tree.map(jnp.zeros_like, params))
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, zeros), micro)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, loss
+
+    return train_step
+
+
+# ---- serving -----------------------------------------------------------------
+
+
+def _cache_specs(cfg: LMConfig, mesh, batch: int, smax: int, dp_axes):
+    """KV cache ShapeDtypeStructs (per decode cell)."""
+    from repro.distributed import named_sharding
+
+    Ld = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    Lm = cfg.n_layers - Ld if cfg.moe else 0
+    msz = mesh.shape["model"]
+
+    def mk(shape, dt, spec):
+        return jax.ShapeDtypeStruct(shape, dt, sharding=named_sharding(mesh, shape, *spec))
+
+    def stack_cache(nl):
+        if cfg.mla:
+            lat = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+            spec = (None, dp_axes, None, "model" if lat % msz == 0 else None)
+            return mk((nl, batch, smax, lat), cfg.jdtype, spec)
+        hv = cfg.n_kv_heads
+        hspec = "model" if hv % msz == 0 else None
+        dspec = None if hspec == "model" else ("model" if cfg.hd % msz == 0 else None)
+        kvspec = (None, dp_axes, None, hspec, dspec)
+        # scales: bf16, sequence-sharded over "model" (heads rarely divide)
+        sspec = (None, dp_axes, "model" if hspec is None else None, hspec, None)
+        if cfg.kv_quant_int8:
+            return (
+                mk((nl, batch, smax, hv, cfg.hd), jnp.int8, kvspec),
+                mk((nl, batch, smax, hv, 1), jnp.bfloat16, sspec),
+                mk((nl, batch, smax, hv, cfg.hd), jnp.int8, kvspec),
+                mk((nl, batch, smax, hv, 1), jnp.bfloat16, sspec),
+            )
+        return (
+            mk((nl, batch, smax, hv, cfg.hd), cfg.jdtype, kvspec),
+            mk((nl, batch, smax, hv, cfg.hd), cfg.jdtype, kvspec),
+        )
+
+    out = {}
+    if Ld:
+        out["dense"] = stack_cache(Ld)
+    if Lm:
+        out["moe"] = stack_cache(Lm)
+    return out
+
+
+def make_decode_step(cfg: LMConfig, dp_axes=("data",), unroll: bool = False):
+    """One-token decode against a (B, Smax) cache at position ``cache_len``."""
+
+    def decode_step(params, caches, tokens, cache_len):
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(cache_len + jnp.arange(1), (B, 1))
+        x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.jdtype)
+        x = _constrain(x, dp_axes, 2)
+
+        def scan_blocks(x, stacked, cache):
+            def body(carry, xs):
+                lp, lc = xs
+                h = L.rmsnorm(carry, lp["ln1"])
+                if cfg.mla:
+                    a, nc = L.mla_attention(
+                        cfg, lp["attn"], h, positions, kv_cache=lc,
+                        cache_len=cache_len,
+                    )
+                else:
+                    a, nc = L.gqa_attention(
+                        cfg, lp["attn"], h, positions, kv_cache=lc,
+                        cache_len=cache_len,
+                    )
+                x2 = carry + a
+                y = L.rmsnorm(x2, lp["ln2"])
+                ffn = (
+                    L.moe_ffn(cfg, lp["ffn"], y, dp_axes)
+                    if "router" in lp["ffn"]
+                    else L.swiglu(lp["ffn"], y)
+                )
+                return x2 + ffn, nc
+
+            return jax.lax.scan(body, x, (stacked, cache),
+                                unroll=True if unroll else 1)
+
+        new_caches = {}
+        if "dense" in params:
+            x, new_caches["dense"] = scan_blocks(x, params["dense"], caches["dense"])
+        if "moe" in params:
+            x, new_caches["moe"] = scan_blocks(x, params["moe"], caches["moe"])
+        x = L.rmsnorm(x, params["final_norm"])
+        head = params["lm_head"] if "lm_head" in params else params["embed"].T
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        return logits[:, 0], new_caches
+
+    return decode_step
+
+
+def make_prefill_step(cfg: LMConfig, dp_axes=("data",), kv_chunk: int = 1024,
+                      seq_shard: bool = False, batch_chunks: int = 1,
+                      unroll: bool = False):
+    """Full-sequence prefill → last-token logits (cache write elided: the
+    dry-run cost of prefill is the forward itself).
+
+    ``batch_chunks`` processes the request batch in sequential chunks —
+    Sarathi-style admission control that bounds prefill working-set memory
+    (the MoE dispatch transient scales with tokens in flight)."""
+
+    def one(params, tokens):
+        logits = forward(cfg, params, tokens, dp_axes=dp_axes, kv_chunk=kv_chunk,
+                         seq_shard=seq_shard, last_only=True, unroll=unroll)
+        return logits[:, 0]
+
+    def prefill_step(params, tokens):
+        if batch_chunks == 1:
+            return one(params, tokens)
+        B, S = tokens.shape
+        assert B % batch_chunks == 0, (B, batch_chunks)
+        chunks = tokens.reshape(batch_chunks, B // batch_chunks, S)
+        out = jax.lax.map(lambda t: one(params, t), chunks)
+        return out.reshape(B, -1)
+
+    return prefill_step
+
+
+# ----------------------------------------------------------------------------
+# Dry-run input specs
+# ----------------------------------------------------------------------------
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec, mesh, dp_axes=("data",)):
+    """ShapeDtypeStructs for one LM cell (tokens / caches / cache_len)."""
+    from repro.distributed import named_sharding
+
+    bspec = named_sharding(mesh, (shape.global_batch, max(shape.seq_len, 1)), dp_axes, None)
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32, sharding=bspec
+            )
+        }
+    if shape.kind == "prefill":
+        return {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32, sharding=bspec
+            )
+        }
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch,), jnp.int32,
+                sharding=named_sharding(mesh, (shape.global_batch,), dp_axes),
+            ),
+            "caches": _cache_specs(
+                cfg, mesh, shape.global_batch, shape.seq_len, dp_axes
+            ),
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+        }
+    raise ValueError(shape.kind)

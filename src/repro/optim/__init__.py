@@ -1,0 +1,10 @@
+"""Optimizers: AdamW (fp32 or 8-bit quantized moments) and SGD-momentum."""
+
+from repro.optim.adamw import (
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    opt_state_specs,
+)
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "opt_state_specs"]

@@ -1,0 +1,178 @@
+"""AdamW with optional 8-bit (block-quantized) moment states.
+
+At 671B parameters, fp32 Adam moments alone are 5.4TB — more than a v5e
+pod's HBM. The 8-bit variant stores m/v as int8 with per-block (128) fp32
+absmax scales (bitsandbytes-style [arXiv:2110.02861]), cutting optimizer
+state to ~2.03 bytes/param so the deepseek-v3 train cell fits the mesh.
+Pure function-style: state is a pytree mirroring params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantized: bool = False  # 8-bit m/v states
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Q8State:
+    """Block-quantized fp32 tensor: int8 payload + per-block absmax scale."""
+
+    q: jax.Array  # (nblk * QBLOCK,) int8
+    scale: jax.Array  # (nblk,) f32
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+
+def _q8_zeros(shape) -> Q8State:
+    flat = 1
+    for s in shape:
+        flat *= s
+    nblk = -(-flat // QBLOCK)
+    return Q8State(
+        q=jnp.zeros((nblk * QBLOCK,), jnp.int8),
+        scale=jnp.zeros((nblk,), jnp.float32),
+        shape=tuple(shape),
+    )
+
+
+def _q8_read(st: Q8State, *, sqrt_scale: bool = False) -> jax.Array:
+    q = st.q.astype(jnp.float32).reshape(-1, QBLOCK)
+    x = (q * st.scale[:, None] / 127.0).reshape(-1)
+    size = 1
+    for s in st.shape:
+        size *= s
+    x = x[:size].reshape(st.shape)
+    return jnp.square(x) if sqrt_scale else x
+
+
+def _q8_write(st: Q8State, x: jax.Array, *, sqrt_scale: bool = False) -> Q8State:
+    """sqrt_scale stores sqrt(x) (x >= 0): a quadratic quantization map.
+
+    Linear int8 under-flows Adam's tiny second moments to exactly 0, which
+    explodes m/(sqrt(v)+eps); the quadratic map keeps the smallest nonzero
+    representable value at (blockmax/127²) instead of blockmax/127.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    if sqrt_scale:
+        flat = jnp.sqrt(jnp.maximum(flat, 0.0))
+    pad = st.q.shape[0] - flat.shape[0]
+    flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blk = flat.reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blk), axis=1), 1e-12)
+    q = jnp.clip(jnp.round(blk / scale[:, None] * 127.0), -127, 127).astype(jnp.int8)
+    return Q8State(q=q.reshape(-1), scale=scale, shape=st.shape)
+
+
+def adamw_init(params: Any, cfg: OptConfig) -> Any:
+    def mk(p):
+        if cfg.quantized:
+            return {"m": _q8_zeros(p.shape), "v": _q8_zeros(p.shape)}
+        return {
+            "m": jnp.zeros(p.shape, jnp.float32),
+            "v": jnp.zeros(p.shape, jnp.float32),
+        }
+
+    return {
+        "mu": jax.tree.map(mk, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params: Any, grads: Any, state: Any, cfg: OptConfig):
+    """One AdamW step → (new_params, new_state)."""
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mv):
+        g32 = g.astype(jnp.float32)
+        if cfg.quantized:
+            m = _q8_read(mv["m"])
+            v = _q8_read(mv["v"], sqrt_scale=True)
+        else:
+            m, v = mv["m"], mv["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = (p.astype(jnp.float32) - cfg.lr * step).astype(p.dtype)
+        if cfg.quantized:
+            return newp, {
+                "m": _q8_write(mv["m"], m),
+                "v": _q8_write(mv["v"], v, sqrt_scale=True),
+            }
+        return newp, {"m": m, "v": v}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+    outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_s = treedef.unflatten([o[1] for o in outs])
+    return new_p, {"mu": new_s, "count": count}
+
+
+def opt_state_specs(param_specs: Any, cfg: OptConfig, mesh) -> Any:
+    """ShapeDtypeStructs for the optimizer state, mirroring param shardings.
+
+    fp32 moments inherit the param sharding; int8 payloads are flat and get
+    sharded across every mesh axis when the block count divides (ZeRO-style
+    fully-sharded optimizer state), else replicated.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ndev = 1
+    for ax in mesh.axis_names:
+        ndev *= mesh.shape[ax]
+
+    def mk(ps):
+        if cfg.quantized:
+            flat = 1
+            for s in ps.shape:
+                flat *= s
+            nblk = -(-flat // QBLOCK)
+            total = nblk * QBLOCK
+            qspec = P(mesh.axis_names) if total % (ndev * QBLOCK) == 0 else P()
+            sspec = P(mesh.axis_names) if nblk % ndev == 0 else P()
+
+            def q8(shape):
+                return Q8State(
+                    q=jax.ShapeDtypeStruct(
+                        (total,), jnp.int8, sharding=NamedSharding(mesh, qspec)
+                    ),
+                    scale=jax.ShapeDtypeStruct(
+                        (nblk,), jnp.float32, sharding=NamedSharding(mesh, sspec)
+                    ),
+                    shape=tuple(shape),
+                )
+
+            return {"m": q8(ps.shape), "v": q8(ps.shape)}
+        return {
+            "m": jax.ShapeDtypeStruct(ps.shape, jnp.float32, sharding=ps.sharding),
+            "v": jax.ShapeDtypeStruct(ps.shape, jnp.float32, sharding=ps.sharding),
+        }
+
+    return {
+        "mu": jax.tree.map(mk, param_specs),
+        "count": jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, P())
+        ),
+    }

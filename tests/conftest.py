@@ -1,0 +1,10 @@
+"""Pytest config. NOTE: no XLA_FLAGS here — smoke tests must see 1 device.
+
+Multi-device tests spawn subprocesses with their own
+``--xla_force_host_platform_device_count`` (see test_dist_steiner.py).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

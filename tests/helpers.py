@@ -1,0 +1,22 @@
+"""Shared test utilities."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.graphs import er_edges, grid_edges, rmat_edges
+
+
+def random_instance(trial: int, n_seeds: int = 5):
+    """Deterministic small graph + seed set for cross-validation tests."""
+    kind = trial % 3
+    if kind == 0:
+        src, dst, w, n = er_edges(30 + 2 * trial, 0.12, max_weight=9, seed=trial)
+    elif kind == 1:
+        src, dst, w, n = rmat_edges(6, 6, max_weight=20, seed=trial)
+    else:
+        src, dst, w, n = grid_edges(6, 7, max_weight=8, seed=trial)
+    rng = np.random.default_rng(1000 + trial)
+    seeds = rng.choice(n, size=min(n_seeds, n), replace=False).astype(np.int32)
+    edges = list(zip(src.tolist(), dst.tolist(), w.tolist()))
+    return src, dst, w, n, seeds, edges

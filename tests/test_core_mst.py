@@ -1,0 +1,76 @@
+"""Prim / Borůvka MST vs networkx on random dense matrices."""
+
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core.mst import boruvka_dense, prim_dense
+
+
+def _random_wmat(S, seed, density=0.7):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 50, (S, S)).astype(np.float32)
+    w = np.minimum(w, w.T)
+    mask = rng.random((S, S)) < density
+    mask = mask | mask.T
+    w = np.where(mask, w, np.inf)
+    np.fill_diagonal(w, np.inf)
+    # ensure connectivity via a ring
+    for i in range(S):
+        j = (i + 1) % S
+        if not np.isfinite(w[i, j]):
+            w[i, j] = w[j, i] = float(rng.integers(1, 50))
+    return w
+
+
+def _mst_weight_nx(w):
+    S = w.shape[0]
+    g = nx.Graph()
+    for i in range(S):
+        for j in range(i + 1, S):
+            if np.isfinite(w[i, j]):
+                g.add_edge(i, j, weight=float(w[i, j]))
+    t = nx.minimum_spanning_tree(g)
+    return sum(d["weight"] for _, _, d in t.edges(data=True))
+
+
+def _parent_weight(parent, w):
+    parent = np.asarray(parent)
+    total, count = 0.0, 0
+    for v, p in enumerate(parent):
+        if p != v:
+            total += w[p, v]
+            count += 1
+    return total, count
+
+
+@pytest.mark.parametrize("algo", [prim_dense, boruvka_dense])
+@pytest.mark.parametrize("S", [2, 3, 8, 17, 33])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mst_weight_matches_networkx(algo, S, seed):
+    w = _random_wmat(S, seed)
+    parent = algo(jnp.asarray(w))
+    total, count = _parent_weight(parent, w)
+    assert count == S - 1  # spanning
+    assert abs(total - _mst_weight_nx(w)) < 1e-3
+
+
+@pytest.mark.parametrize("algo", [prim_dense, boruvka_dense])
+def test_mst_equal_weights(algo):
+    """All-equal weights stress the tie-breaking / 2-cycle logic."""
+    S = 12
+    w = np.full((S, S), 7.0, np.float32)
+    np.fill_diagonal(w, np.inf)
+    parent = algo(jnp.asarray(w))
+    total, count = _parent_weight(parent, w)
+    assert count == S - 1
+    assert total == 7.0 * (S - 1)
+
+
+def test_prim_boruvka_agree():
+    for seed in range(5):
+        w = _random_wmat(21, 100 + seed)
+        tp, _ = _parent_weight(prim_dense(jnp.asarray(w)), w)
+        tb, _ = _parent_weight(boruvka_dense(jnp.asarray(w)), w)
+        assert abs(tp - tb) < 1e-3

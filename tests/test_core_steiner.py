@@ -1,0 +1,93 @@
+"""End-to-end Steiner pipeline vs Mehlhorn / KMB / exact oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_edges, steiner_tree, tree_edge_list
+from repro.core import ref
+
+from helpers import random_instance
+
+
+@pytest.mark.parametrize("mode", ["dense", "bucket"])
+@pytest.mark.parametrize("mst_algo", ["prim", "boruvka"])
+@pytest.mark.parametrize("trial", range(4))
+def test_pipeline_matches_mehlhorn(mode, mst_algo, trial):
+    src, dst, w, n, seeds, edges = random_instance(trial)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    t_ref, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    res = steiner_tree(g, jnp.asarray(seeds), mode=mode, mst_algo=mst_algo)
+    assert abs(float(res.tree.total_distance) - d_ref) < 1e-4
+    assert tree_edge_list(res.state, res.tree) == t_ref
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_two_approximation_bound(trial):
+    """Paper Table VII: D(G_S)/D_min <= 2(1 - 1/l) <= 2(1 - 1/|S|')."""
+    src, dst, w, n, seeds, edges = random_instance(trial, n_seeds=5)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    res = steiner_tree(g, jnp.asarray(seeds))
+    d = float(res.tree.total_distance)
+    opt = ref.dreyfus_wagner(n, edges, seeds.tolist())
+    assert d >= opt - 1e-4  # can't beat the optimum
+    assert d <= 2.0 * (1.0 - 1.0 / len(seeds)) * opt + 1e-4
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_tree_validity(trial):
+    src, dst, w, n, seeds, edges = random_instance(trial)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    res = steiner_tree(g, jnp.asarray(seeds))
+    tset = tree_edge_list(res.state, res.tree)
+    assert ref.tree_is_valid(n, edges, seeds.tolist(), tset)
+    assert len(tset) == int(res.tree.num_edges)
+
+
+def test_two_seeds_is_shortest_path():
+    """|S| = 2 degenerates to a shortest weighted path (paper §I)."""
+    import scipy.sparse.csgraph as csg
+
+    src, dst, w, n, _, edges = random_instance(0)
+    seeds = np.asarray([0, n - 1], np.int32)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    res = steiner_tree(g, jnp.asarray(seeds))
+    sp = csg.dijkstra(ref._min_csr(n, edges), indices=[0])[0, n - 1]
+    assert abs(float(res.tree.total_distance) - sp) < 1e-4
+
+
+def test_kmb_agrees_on_total_bound():
+    """KMB and Mehlhorn share the bound; both stay within it."""
+    src, dst, w, n, seeds, edges = random_instance(2)
+    _, d_kmb = ref.kmb_ref(n, edges, seeds.tolist())
+    _, d_meh = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    opt = ref.dreyfus_wagner(n, edges, seeds.tolist())
+    bound = 2.0 * (1.0 - 1.0 / len(seeds)) * opt + 1e-4
+    assert d_kmb <= bound and d_meh <= bound
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nv=st.integers(10, 36),
+    p=st.floats(0.15, 0.5),
+    nseeds=st.integers(2, 5),
+    rngseed=st.integers(0, 10**6),
+)
+def test_steiner_property(nv, p, nseeds, rngseed):
+    """Property: valid tree, D == Mehlhorn oracle, within 2-approx bound."""
+    from repro.data.graphs import er_edges
+
+    src, dst, w, n = er_edges(nv, p, max_weight=10, seed=rngseed)
+    rng = np.random.default_rng(rngseed)
+    seeds = rng.choice(n, size=nseeds, replace=False).astype(np.int32)
+    edges = list(zip(src.tolist(), dst.tolist(), w.tolist()))
+    g = from_edges(src, dst, w, n, pad_to=8)
+    res = steiner_tree(g, jnp.asarray(seeds))
+    d = float(res.tree.total_distance)
+    tset = tree_edge_list(res.state, res.tree)
+    assert ref.tree_is_valid(n, edges, seeds.tolist(), tset)
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    assert abs(d - d_ref) < 1e-3
+    opt = ref.dreyfus_wagner(n, edges, seeds.tolist())
+    assert opt - 1e-4 <= d <= 2.0 * (1 - 1 / nseeds) * opt + 1e-4

@@ -1,0 +1,30 @@
+"""Distributed (shard_map) Steiner pipeline — 8 forced host devices.
+
+Device count is fixed at first jax init, so these run in a subprocess with
+their own XLA_FLAGS (conftest deliberately leaves the main process at 1).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_DIR = os.path.dirname(__file__)
+_SRC = os.path.abspath(os.path.join(_DIR, "..", "src"))
+
+
+@pytest.mark.slow
+def test_dist_steiner_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_DIR, "_dist_prog.py")],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert proc.stdout.count("OK") >= 5, proc.stdout

@@ -1,0 +1,74 @@
+"""Dry-run guard: one LM cell must lower+compile on both production meshes.
+
+Full sweeps live in benchmarks/results/dryrun/ (43 cells × 2 meshes); this
+test keeps the machinery honest in CI at ~2 min by compiling the cheapest
+cell (starcoder2 decode) end-to-end in a 512-device subprocess.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+_DIR = os.path.dirname(__file__)
+_SRC = os.path.abspath(os.path.join(_DIR, "..", "src"))
+
+_PROG = r"""
+import sys, json
+from pathlib import Path
+from repro.launch.dryrun import run_cell
+from repro.configs import get_arch
+out = Path(sys.argv[1])
+shape = [s for s in get_arch("starcoder2-3b").shapes if s.name == "decode_32k"][0]
+for mp in (False, True):
+    rec = run_cell("starcoder2-3b", shape, mp, out, force=True)
+    assert rec["status"] == "ok", rec
+    assert rec["memory"]["fits_16gb"], rec["memory"]
+    assert rec["roofline"]["dominant"] in ("memory", "collective", "compute")
+print("DRYRUN_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_both_meshes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own 512-device flag
+    proc = subprocess.run(
+        [sys.executable, "-c", _PROG, str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "DRYRUN_OK" in proc.stdout
+
+
+def test_roofline_collective_parser():
+    """HLO collective-byte parsing on a hand-written snippet."""
+    from repro.launch.roofline import collective_bytes
+
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups={{0,1}}
+  %ar.1 = f32[256]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%y), dimensions={0}
+  %cp = u8[128]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %notacoll = f32[999]{0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4 * 2  # ring factor 2
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["collective-permute"] == 128
+    assert out["all-to-all"] == 0
+
+
+def test_registry_shapes_cover_assignment():
+    """40 assigned cells: 5 LM × 4 + 4 GNN × 4 + 1 recsys × 4."""
+    from repro.configs import ARCH_IDS, get_arch
+
+    cells = 0
+    for a in ARCH_IDS:
+        cells += len(get_arch(a).shapes)
+    assert cells == 40

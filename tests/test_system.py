@@ -1,0 +1,48 @@
+"""End-to-end behaviour tests for the paper's system (single process)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import from_edges, steiner_tree, tree_edge_list
+from repro.core import ref
+from repro.data.graphs import rmat_edges, select_seeds
+
+
+def test_end_to_end_rmat_bfs_level_seeds():
+    """Paper's evaluation recipe: RMAT graph, BFS-level seeds, 2-approx."""
+    src, dst, w, n = rmat_edges(9, 8, max_weight=100, seed=42)
+    seeds = select_seeds(n, src, dst, 16, strategy="bfs_level", seed=7)
+    g = from_edges(src, dst, w, n, pad_to=64)
+    res = steiner_tree(g, jnp.asarray(seeds), mode="bucket")
+    d = float(res.tree.total_distance)
+    edges = list(zip(src.tolist(), dst.tolist(), w.tolist()))
+    tset = tree_edge_list(res.state, res.tree)
+    assert ref.tree_is_valid(n, edges, seeds.tolist(), tset)
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    assert abs(d - d_ref) < 1e-3
+    # Steiner vertices are allowed but every seed is in the tree
+    marked = np.asarray(res.tree.in_tree_vertex)
+    assert marked[seeds].all()
+
+
+def test_seed_strategies_tree_size_ordering():
+    """Paper Table V: proximate seeds → much smaller trees than eccentric."""
+    src, dst, w, n = rmat_edges(9, 8, max_weight=20, seed=3)
+    g = from_edges(src, dst, w, n, pad_to=64)
+    totals = {}
+    for strat in ("proximate", "eccentric"):
+        seeds = select_seeds(n, src, dst, 8, strategy=strat, seed=11)
+        res = steiner_tree(g, jnp.asarray(seeds))
+        totals[strat] = float(res.tree.total_distance)
+    assert totals["proximate"] < totals["eccentric"]
+
+
+def test_single_pair_seed_count_scaling():
+    """More seeds → larger trees (monotone in expectation; fixed RNG)."""
+    src, dst, w, n = rmat_edges(9, 8, max_weight=20, seed=5)
+    g = from_edges(src, dst, w, n, pad_to=64)
+    rng = np.random.default_rng(0)
+    pool = rng.choice(n, size=32, replace=False).astype(np.int32)
+    d4 = float(steiner_tree(g, jnp.asarray(pool[:4])).tree.total_distance)
+    d32 = float(steiner_tree(g, jnp.asarray(pool)).tree.total_distance)
+    assert d32 > d4
