@@ -80,12 +80,12 @@ def bench_fig3():
     prog = r"""
 import sys, time
 import numpy as np, jax
-from jax.sharding import AxisType
+from repro import compat
 from repro.core.dist_steiner import partition_edges, run_dist_steiner
 from repro.data.graphs import rmat_edges, select_seeds
 ndev = int(sys.argv[1])
 shape = {1:(1,1),2:(1,2),4:(2,2),8:(2,4)}[ndev]
-mesh = jax.make_mesh(shape, ("data","model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh(shape, ("data","model"))
 src, dst, w, n = rmat_edges(13, 8, max_weight=100, seed=0)
 seeds = select_seeds(n, src, dst, 64, strategy="bfs_level", seed=1)
 part = partition_edges(src, dst, w, n, n_replica=shape[0], n_blocks=shape[1])

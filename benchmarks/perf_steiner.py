@@ -30,6 +30,7 @@ OUT = Path(__file__).resolve().parent / "results" / "perf"
 def run_variant(cell: str, name: str, **cfg_kw) -> dict:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro import compat
     from repro.configs import get_arch
     from repro.core.dist_steiner import DistSteinerConfig, make_dist_steiner
     from repro.core.dist_steiner_2d import make_dist_steiner_2d
@@ -48,7 +49,7 @@ def run_variant(cell: str, name: str, **cfg_kw) -> dict:
     total_e = n_rep * n_blocks * eb
     partition_2d = cfg_kw.pop("partition_2d", False)
     cfg = DistSteinerConfig(n=n, nb=nb, num_seeds=S, max_iters=10_000, **cfg_kw)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if partition_2d:
             nf = -(-(-(-n // (n_rep * n_blocks))) // 8) * 8
             fn = make_dist_steiner_2d(

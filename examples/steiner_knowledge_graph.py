@@ -23,14 +23,13 @@ import numpy as np
 
 def main() -> None:
     import jax
-    from jax.sharding import AxisType
+
+    from repro import compat
 
     ndev = len(jax.devices())
     shapes = {1: (1, 1), 2: (1, 2), 4: (2, 2), 8: (2, 4)}
     mesh_shape = shapes.get(ndev, (2, ndev // 2))
-    mesh = jax.make_mesh(
-        mesh_shape, ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+    mesh = compat.make_mesh(mesh_shape, ("data", "model"))
     print(f"mesh: {dict(zip(('data', 'model'), mesh_shape))} on {ndev} devices")
 
     from repro.core import ref

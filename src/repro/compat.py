@@ -1,0 +1,100 @@
+"""jax version-compat shims (single choke point for API drift).
+
+The repo targets current jax (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``) but must also run on 0.4.x, where those names
+live elsewhere or don't exist:
+
+  new jax                         jax 0.4.x
+  ------------------------------  -------------------------------------
+  jax.sharding.AxisType           (absent — Auto is the only behavior)
+  jax.make_mesh(..., axis_types=) jax.make_mesh(shape, names)
+  jax.set_mesh(mesh)              ``with mesh:`` (Mesh context manager)
+  jax.shard_map(f, mesh=..., …)   jax.experimental.shard_map.shard_map
+
+Import from here instead of feature-testing at call sites.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # new jax: explicit axis types
+    from jax.sharding import AxisType  # noqa: F401
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # 0.4.x: every axis behaves like Auto
+    AxisType = None  # type: ignore[assignment]
+    HAS_AXIS_TYPE = False
+
+
+def axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` where supported, ``{}`` otherwise."""
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with all-Auto axis types on any jax version.
+
+    ``jax.make_mesh`` only exists from 0.4.35; earlier 0.4.x falls back to
+    an explicit device ``Mesh`` over the first prod(shape) devices.
+    """
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(
+            tuple(shape), tuple(axes), **axis_type_kwargs(len(axes))
+        )
+    import numpy as np
+
+    ndev = int(np.prod(tuple(shape)))
+    return make_mesh_from_devices(jax.devices()[:ndev], shape, axes)
+
+
+def make_mesh_from_devices(devices, shape: Sequence[int], axes: Sequence[str]):
+    """Explicit-device ``Mesh`` with all-Auto axis types on any jax version."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    arr = np.asarray(devices).reshape(tuple(shape))
+    return Mesh(arr, tuple(axes), **axis_type_kwargs(len(axes)))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on new jax; on 0.4.x a ``Mesh`` is itself a context
+    manager with the same scoped effect.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """Cost-analysis dict of a compiled executable on any jax version.
+
+    New jax returns the dict directly; 0.4.x returns a one-element list of
+    per-program dicts (and ``[]``/``None`` on backends without the pass).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_04x(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+        )

@@ -6,7 +6,12 @@ Numpy oracles (Dijkstra / Mehlhorn / KMB / exact): :mod:`repro.core.ref`.
 """
 
 from repro.core.graph import EllGraph, Graph, from_edges, sort_by_dst, to_ell
-from repro.core.steiner import SteinerResult, steiner_tree
+from repro.core.steiner import (
+    SteinerResult,
+    finish_pipeline,
+    run_pipeline,
+    steiner_tree,
+)
 from repro.core.tree import SteinerTree, tree_edge_list
 from repro.core.voronoi import (
     VoronoiState,
@@ -22,6 +27,8 @@ __all__ = [
     "sort_by_dst",
     "to_ell",
     "SteinerResult",
+    "finish_pipeline",
+    "run_pipeline",
     "steiner_tree",
     "SteinerTree",
     "tree_edge_list",

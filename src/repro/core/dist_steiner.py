@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 from repro.core.distance_graph import local_pair_tables
 from repro.core.mst import boruvka_dense, prim_dense
 from repro.core.tree import bridge_endpoints
@@ -434,7 +436,7 @@ def make_dist_steiner(
     edge_spec = P((*replica_axes, vert_axis))
     state_spec = P(vert_axis)
     rep = P()
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(edge_spec, edge_spec, edge_spec, rep),

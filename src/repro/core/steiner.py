@@ -11,6 +11,11 @@ lives in :mod:`repro.core.dist_steiner`. Both run the same five stages:
 
 Approximation bound: D(G_S)/D_min <= 2(1 - 1/l) by Mehlhorn's proof [17]
 (every MST of G'1 is an MST of the complete seed distance graph G_1).
+
+Every stage is batch-safe: :func:`run_pipeline` is the unjitted pipeline
+body, safe to compose under ``jax.vmap`` / ``jax.jit`` — the multi-query
+serving layer (:mod:`repro.serve.batch`) vmaps it over a leading query
+axis against one resident graph.
 """
 
 from __future__ import annotations
@@ -26,7 +31,7 @@ from repro.core import distance_graph as dgmod
 from repro.core import mst as mstmod
 from repro.core import tree as treemod
 from repro.core import voronoi as vmod
-from repro.core.graph import Graph
+from repro.core.graph import EllGraph, Graph, to_ell
 
 
 @jax.tree_util.register_dataclass
@@ -39,37 +44,15 @@ class SteinerResult:
     dmat: jax.Array  # (S*S,) distance-graph weights
 
 
-@functools.partial(
-    jax.jit, static_argnames=("mode", "mst_algo", "max_iters", "num_seeds")
-)
-def steiner_tree(
+def finish_pipeline(
     g: Graph,
-    seeds: jax.Array,
-    *,
-    num_seeds: Optional[int] = None,
-    mode: str = "bucket",
+    st: vmod.VoronoiState,
+    stats: vmod.VoronoiStats,
+    S: int,
     mst_algo: str = "prim",
-    delta: Optional[float] = None,
-    max_iters: Optional[int] = None,
 ) -> SteinerResult:
-    """Computes a 2-approximate Steiner minimal tree for (g, seeds).
-
-    Args:
-      g: symmetric weighted graph (padded COO).
-      seeds: (S,) int32 seed vertex ids.
-      num_seeds: static |S| (defaults to seeds.shape[0]).
-      mode: Voronoi relaxation schedule — "dense" | "bucket".
-      mst_algo: "prim" (paper-faithful sequential analogue) | "boruvka".
-      delta: bucket width (mode="bucket").
-      max_iters: safety cap on relaxation rounds.
-
-    Returns:
-      SteinerResult; ``result.tree.total_distance`` is D(G_S).
-    """
-    S = int(num_seeds if num_seeds is not None else seeds.shape[0])
-    st, stats = vmod.voronoi_cells(
-        g, seeds, mode=mode, delta=delta, max_iters=max_iters
-    )
+    """Stages 2-5 (distance graph → MST → pruning → walk) from converged
+    Voronoi state. Pure jnp — vmap/jit-compose freely."""
     dmat, umat, vmat = dgmod.distance_graph(g, st, S)
     wmat = dmat.reshape(S, S)
     wmat = jnp.minimum(wmat, wmat.T)  # symmetrize upper-triangular table
@@ -82,3 +65,130 @@ def steiner_tree(
         raise ValueError(f"unknown mst_algo: {mst_algo!r}")
     tree = treemod.extract_tree(g.n, st, dmat, umat, vmat, parent, S)
     return SteinerResult(tree=tree, state=st, stats=stats, parent=parent, dmat=dmat)
+
+
+def run_pipeline(
+    g: Graph,
+    seeds: jax.Array,
+    *,
+    num_seeds: Optional[int] = None,
+    mode: str = "bucket",
+    mst_algo: str = "prim",
+    delta: Optional[float] = None,
+    max_iters: Optional[int] = None,
+) -> SteinerResult:
+    """Unjitted full pipeline over the COO graph (modes "dense"/"bucket").
+
+    This is the trace-level entry point: :func:`steiner_tree` jits it for
+    the one-query case and :func:`repro.serve.batch.steiner_tree_batch`
+    vmaps it over a (B, S) seed batch.
+    """
+    S = int(num_seeds if num_seeds is not None else seeds.shape[0])
+    st, stats = vmod.voronoi_cells(
+        g, seeds, mode=mode, delta=delta, max_iters=max_iters
+    )
+    return finish_pipeline(g, st, stats, S, mst_algo)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "mst_algo", "max_iters", "num_seeds")
+)
+def _steiner_coo(
+    g: Graph,
+    seeds: jax.Array,
+    *,
+    num_seeds: Optional[int],
+    mode: str,
+    mst_algo: str,
+    delta: Optional[float],
+    max_iters: Optional[int],
+) -> SteinerResult:
+    return run_pipeline(
+        g,
+        seeds,
+        num_seeds=num_seeds,
+        mode=mode,
+        mst_algo=mst_algo,
+        delta=delta,
+        max_iters=max_iters,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mst_algo", "max_iters", "num_seeds", "frontier_size"),
+)
+def _steiner_frontier(
+    g: Graph,
+    ell: EllGraph,
+    seeds: jax.Array,
+    *,
+    num_seeds: Optional[int],
+    mst_algo: str,
+    frontier_size: int,
+    max_iters: Optional[int],
+) -> SteinerResult:
+    S = int(num_seeds if num_seeds is not None else seeds.shape[0])
+    st, stats = vmod.voronoi_cells_frontier(
+        ell, seeds, frontier_size=frontier_size, max_rounds=max_iters
+    )
+    return finish_pipeline(g, st, stats, S, mst_algo)
+
+
+def steiner_tree(
+    g: Graph,
+    seeds: jax.Array,
+    *,
+    num_seeds: Optional[int] = None,
+    mode: str = "bucket",
+    mst_algo: str = "prim",
+    delta: Optional[float] = None,
+    max_iters: Optional[int] = None,
+    ell: Optional[EllGraph] = None,
+    ell_width: int = 32,
+    frontier_size: int = 1024,
+) -> SteinerResult:
+    """Computes a 2-approximate Steiner minimal tree for (g, seeds).
+
+    Args:
+      g: symmetric weighted graph (padded COO).
+      seeds: (S,) int32 seed vertex ids.
+      num_seeds: static |S| (defaults to seeds.shape[0]).
+      mode: Voronoi relaxation schedule — "dense" | "bucket" | "frontier".
+      mst_algo: "prim" (paper-faithful sequential analogue) | "boruvka".
+      delta: bucket width (mode="bucket").
+      max_iters: safety cap on relaxation rounds.
+      ell: prebuilt ELL adjacency for mode="frontier"; built on the host
+        from ``g`` when omitted (O(E) python — pass one in when issuing
+        repeated frontier queries against the same graph).
+      ell_width: ELL row width when building the view here.
+      frontier_size: top-K frontier rows per round (mode="frontier").
+
+    Returns:
+      SteinerResult; ``result.tree.total_distance`` is D(G_S).
+    """
+    if mode == "frontier":
+        if ell is None:
+            ell = to_ell(g, ell_width)
+        return _steiner_frontier(
+            g,
+            ell,
+            seeds,
+            num_seeds=num_seeds,
+            mst_algo=mst_algo,
+            frontier_size=frontier_size,
+            max_iters=max_iters,
+        )
+    if mode not in ("dense", "bucket"):
+        raise ValueError(
+            f"unknown mode: {mode!r} (use 'dense' | 'bucket' | 'frontier')"
+        )
+    return _steiner_coo(
+        g,
+        seeds,
+        num_seeds=num_seeds,
+        mode=mode,
+        mst_algo=mst_algo,
+        delta=delta,
+        max_iters=max_iters,
+    )

@@ -60,10 +60,18 @@ class VoronoiStats:
 
 
 def init_state(n: int, seeds: jax.Array) -> VoronoiState:
-    """Paper Alg. 3 INITIALIZATION: seeds at distance 0 owning themselves."""
+    """Paper Alg. 3 INITIALIZATION: seeds at distance 0 owning themselves.
+
+    Duplicate seed entries are safe: the label scatter is a ``min`` so a
+    vertex listed at several seed indices is owned by the lowest index —
+    consistent with the lexicographic (dist, lab, pred) update order. The
+    higher duplicate indices then label empty cells, which makes
+    pad-with-duplicates inert through the whole pipeline (the serving
+    layer's shape-bucketing relies on this; see :mod:`repro.serve.plan`).
+    """
     S = seeds.shape[0]
     dist = jnp.full((n,), INF, jnp.float32).at[seeds].set(0.0)
-    lab = jnp.full((n,), S, jnp.int32).at[seeds].set(jnp.arange(S, dtype=jnp.int32))
+    lab = jnp.full((n,), S, jnp.int32).at[seeds].min(jnp.arange(S, dtype=jnp.int32))
     pred = jnp.arange(n, dtype=jnp.int32)
     return VoronoiState(dist=dist, lab=lab, pred=pred)
 
@@ -241,6 +249,7 @@ def voronoi_cells_frontier(
     """
     n = ell.n
     R, k = ell.nbr.shape
+    frontier_size = min(frontier_size, R)  # top_k cap on small graphs
     S = seeds.shape[0]
     S_sent = jnp.int32(jnp.iinfo(jnp.int32).max)
     cap = jnp.int32(min(max_rounds if max_rounds is not None else 16 * n + 64, 2**31 - 2))

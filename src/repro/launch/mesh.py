@@ -3,6 +3,10 @@
 v5e pod = 256 chips as (data=16, model=16); the multi-pod config stacks a
 leading "pod" axis (pure DP across the DCN domain). A FUNCTION, not a
 module constant, so importing never touches jax device state.
+
+All mesh constructors go through :mod:`repro.compat`, which papers over
+the ``jax.sharding.AxisType`` / ``axis_types=`` API drift between jax
+0.4.x and current jax.
 """
 
 from __future__ import annotations
@@ -12,29 +16,26 @@ import numpy as np
 
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
-    from jax.sharding import AxisType
+
+    from repro import compat
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     ndev = int(np.prod(shape))
     devs = jax.devices()
     if len(devs) == ndev:
-        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        return compat.make_mesh(shape, axes)
     if len(devs) < ndev:
         raise RuntimeError(
             f"need {ndev} devices for mesh {shape}, have {len(devs)} — "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
         )
     # more devices than needed (e.g. 512 forced, single-pod 256): slice
-    from jax.sharding import Mesh
-
-    arr = np.asarray(devs[:ndev]).reshape(shape)
-    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh_from_devices(devs[:ndev], shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for subprocess tests (8 forced host devices)."""
-    import jax
-    from jax.sharding import AxisType
+    from repro import compat
 
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

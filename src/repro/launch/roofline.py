@@ -117,7 +117,9 @@ class Roofline:
 def analyze(compiled, model_flops_total: Optional[float] = None,
             n_chips: int = 256) -> Roofline:
     """Builds the three-term roofline from a compiled executable."""
-    ca = compiled.cost_analysis()
+    from repro import compat
+
+    ca = compat.cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     bts = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -1,0 +1,34 @@
+"""Batched Steiner query-serving subsystem.
+
+Turns the one-shot :func:`repro.core.steiner_tree` into a multi-query
+engine over a shared preprocessed graph:
+
+* :mod:`repro.serve.batch` — vmap-batched pipeline, B queries / launch
+* :mod:`repro.serve.plan`  — canonicalization, shape buckets, inert padding
+* :mod:`repro.serve.engine` — micro-batching scheduler + LRU result cache
+"""
+
+from repro.serve.batch import steiner_tree_batch
+from repro.serve.engine import LRUCache, QueryResult, ServeConfig, SteinerServer
+from repro.serve.plan import (
+    DEFAULT_BUCKETS,
+    QueryPlan,
+    canonical_key,
+    choose_bucket,
+    pad_seed_set,
+    plan_query,
+)
+
+__all__ = [
+    "steiner_tree_batch",
+    "LRUCache",
+    "QueryResult",
+    "ServeConfig",
+    "SteinerServer",
+    "DEFAULT_BUCKETS",
+    "QueryPlan",
+    "canonical_key",
+    "choose_bucket",
+    "pad_seed_set",
+    "plan_query",
+]

@@ -1,0 +1,328 @@
+"""Micro-batching query engine over one resident graph.
+
+The serving loop the ROADMAP's "heavy traffic" north star needs: queries
+arrive one at a time, the engine canonicalizes and bucket-pads them
+(:mod:`repro.serve.plan`), answers repeats from an LRU result cache, and
+drains the rest through the vmap-batched pipeline
+(:mod:`repro.serve.batch`) in fixed-shape micro-batches so the whole
+service runs on |buckets| warm executables.
+
+Lifecycle::
+
+    server = SteinerServer(g, ServeConfig(max_batch=8))
+    server.warmup()                  # optional: compile before traffic
+    t = server.submit([3, 17, 42])   # enqueue, returns a ticket
+    results = server.flush()         # run pending micro-batches
+    results[t].total_distance
+
+or one-shot: ``server.query([3, 17, 42])``. Counters (QPS, p50/p99
+latency, cache hit rate, padding waste) via ``server.stats()``.
+
+Future scaling PRs plug in here: sharded execution swaps
+``steiner_tree_batch`` for the ``dist_steiner`` pipeline behind the same
+queue; landmark caching and async prefetch hook the admission path.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.serve import plan as planmod
+from repro.serve.batch import steiner_tree_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static service configuration (fixes the executable set)."""
+
+    buckets: Tuple[int, ...] = planmod.DEFAULT_BUCKETS
+    max_batch: int = 8  # B — lanes per micro-batch executable
+    cache_capacity: int = 4096  # LRU entries (0 disables caching)
+    mode: str = "bucket"  # Voronoi schedule: "dense" | "bucket"
+    mst_algo: str = "prim"
+    delta: Optional[float] = None
+    max_iters: Optional[int] = None
+    materialize_edges: bool = False  # host-side edge sets in results
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One served query (cache-hit results are the cached object)."""
+
+    key: Tuple[int, ...]
+    bucket: int
+    total_distance: float
+    num_edges: int
+    # immutable so cached entries can be shared across repeat queries
+    edges: Optional[FrozenSet[Tuple[int, int]]]  # None unless materialize_edges
+    from_cache: bool
+    latency_s: float
+
+    def with_latency(self, latency_s: float, from_cache: bool) -> "QueryResult":
+        return dataclasses.replace(
+            self, latency_s=latency_s, from_cache=from_cache
+        )
+
+
+class LRUCache:
+    """Plain OrderedDict LRU keyed on the canonical seed tuple."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: "collections.OrderedDict[Tuple[int, ...], QueryResult]" = (
+            collections.OrderedDict()
+        )
+
+    def get(self, key) -> Optional[QueryResult]:
+        if self.capacity <= 0:
+            return None
+        hit = self._d.get(key)
+        if hit is not None:
+            self._d.move_to_end(key)
+        return hit
+
+    def put(self, key, value: QueryResult) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    plan: planmod.QueryPlan
+    t_submit: float
+
+
+class SteinerServer:
+    """Batched Steiner query server over one resident :class:`Graph`."""
+
+    def __init__(self, g: Graph, config: ServeConfig = ServeConfig()):
+        self.g = g
+        self.config = config
+        self.cache = LRUCache(config.cache_capacity)
+        self._queues: Dict[int, "collections.deque[_Pending]"] = {
+            b: collections.deque() for b in sorted(config.buckets)
+        }
+        self._next_ticket = 0
+        # counters (latency reservoir bounded: the server is long-lived)
+        self._latencies: "collections.deque[float]" = collections.deque(
+            maxlen=16384
+        )
+        self._completed = 0
+        self._cache_hits = 0
+        self._lanes_run = 0
+        self._lanes_padded = 0
+        self._batches: Dict[int, int] = {b: 0 for b in config.buckets}
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def submit(self, seeds: Sequence[int]) -> int:
+        """Enqueues one seed-set query; returns its ticket id.
+
+        Raises ValueError on seeds outside [0, n) — jax scatters would
+        silently drop them and a garbage result would poison the cache.
+        """
+        arr = np.asarray(seeds, np.int64)
+        if arr.size and (arr.min() < 0 or arr.max() >= self.g.n):
+            raise ValueError(
+                f"seed ids must be in [0, {self.g.n}), got "
+                f"[{arr.min()}, {arr.max()}]"
+            )
+        p = planmod.plan_query(seeds, self.config.buckets)
+        t = self._next_ticket
+        self._next_ticket += 1
+        now = time.perf_counter()
+        if self._t_first is None:
+            self._t_first = now
+        self._queues[p.bucket].append(_Pending(ticket=t, plan=p, t_submit=now))
+        return t
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compiles every bucket executable before traffic arrives."""
+        lo = int(np.argmax(np.isfinite(np.asarray(self.g.w))))
+        u = int(np.asarray(self.g.src)[lo])
+        v = int(np.asarray(self.g.dst)[lo])
+        for b in self.config.buckets:
+            batch = np.tile(
+                planmod.pad_seed_set((min(u, v), max(u, v)), b),
+                (self.config.max_batch, 1),
+            )
+            self._execute(b, batch)
+
+    def _execute(
+        self, bucket: int, seed_batch: np.ndarray, n_real: Optional[int] = None
+    ):
+        """One fixed-shape (max_batch, bucket) pipeline launch.
+
+        ``n_real`` bounds host-side edge materialization to the lanes that
+        carry distinct queries (the rest are inert batch padding).
+        """
+        res = steiner_tree_batch(
+            self.g,
+            seed_batch,
+            num_seeds=bucket,
+            mode=self.config.mode,
+            mst_algo=self.config.mst_algo,
+            delta=self.config.delta,
+            max_iters=self.config.max_iters,
+        )
+        totals = np.asarray(res.tree.total_distance)
+        nedges = np.asarray(res.tree.num_edges)
+        edges = None
+        if self.config.materialize_edges:
+            edges = _edge_sets(
+                res, seed_batch.shape[0] if n_real is None else n_real
+            )
+        return totals, nedges, edges
+
+    def flush(self) -> Dict[int, QueryResult]:
+        """Drains every bucket queue; returns {ticket: QueryResult}."""
+        out: Dict[int, QueryResult] = {}
+        B = self.config.max_batch
+        for bucket, queue in self._queues.items():
+            while queue:
+                # Assemble up to B *distinct uncached* keys; duplicate and
+                # already-cached tickets ride along without a lane.
+                lanes: List[np.ndarray] = []
+                lane_of: Dict[Tuple[int, ...], int] = {}
+                riders: List[Tuple[_Pending, Optional[QueryResult]]] = []
+                while queue and len(lanes) < B:
+                    p = queue.popleft()
+                    hit = self.cache.get(p.plan.key)
+                    if hit is None and p.plan.key not in lane_of:
+                        lane_of[p.plan.key] = len(lanes)
+                        lanes.append(p.plan.padded)
+                    riders.append((p, hit))
+                t_assembled = time.perf_counter()
+                t_done = t_assembled
+                fresh_by_key: Dict[Tuple[int, ...], QueryResult] = {}
+                if lanes:
+                    n_real = len(lanes)
+                    while len(lanes) < B:  # inert batch-dim padding
+                        lanes.append(lanes[0])
+                    totals, nedges, edges = self._execute(
+                        bucket, np.stack(lanes), n_real
+                    )
+                    t_done = time.perf_counter()
+                    self._batches[bucket] += 1
+                    self._lanes_run += B
+                    self._lanes_padded += B - n_real
+                    for key, i in lane_of.items():
+                        fresh = QueryResult(
+                            key=key,
+                            bucket=bucket,
+                            total_distance=float(totals[i]),
+                            num_edges=int(nedges[i]),
+                            edges=edges[i] if edges is not None else None,
+                            from_cache=False,
+                            latency_s=0.0,
+                        )
+                        fresh_by_key[key] = fresh
+                        self.cache.put(key, fresh)
+                for p, hit in riders:
+                    if hit is None:
+                        hit = fresh_by_key[p.plan.key]
+                        from_cache = False
+                    else:
+                        from_cache = True
+                    self._cache_hits += from_cache
+                    self._completed += 1
+                    # hits were ready at assembly; only fresh lanes waited
+                    # for the batch execute
+                    lat = (t_assembled if from_cache else t_done) - p.t_submit
+                    self._latencies.append(lat)
+                    out[p.ticket] = hit.with_latency(lat, from_cache)
+                self._t_last = t_done
+        return out
+
+    # ------------------------------------------------------------------
+    # convenience front-ends
+    # ------------------------------------------------------------------
+
+    def query(self, seeds: Sequence[int]) -> QueryResult:
+        """Synchronous single query (micro-batch of one)."""
+        t = self.submit(seeds)
+        return self.flush()[t]
+
+    def query_many(self, seed_sets: Sequence[Sequence[int]]) -> List[QueryResult]:
+        """Submits a burst, flushes once, returns results in input order."""
+        tickets = [self.submit(s) for s in seed_sets]
+        results = self.flush()
+        return [results[t] for t in tickets]
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        lat = (
+            np.asarray(list(self._latencies))
+            if self._latencies
+            else np.zeros(1)
+        )
+        span = (
+            (self._t_last - self._t_first)
+            if (self._t_first is not None and self._t_last is not None)
+            else 0.0
+        )
+        return {
+            "completed": self._completed,
+            "cache_hits": self._cache_hits,
+            "cache_hit_rate": (
+                self._cache_hits / self._completed if self._completed else 0.0
+            ),
+            "cache_entries": len(self.cache),
+            "qps": self._completed / span if span > 0 else 0.0,
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "lanes_run": self._lanes_run,
+            "lanes_padded": self._lanes_padded,
+            "pad_waste": (
+                self._lanes_padded / self._lanes_run if self._lanes_run else 0.0
+            ),
+            "batches_per_bucket": dict(self._batches),
+        }
+
+
+def _edge_sets(res, n_lanes: int) -> List[FrozenSet[Tuple[int, int]]]:
+    """Host-side undirected edge sets of the first ``n_lanes`` lanes."""
+    pred = np.asarray(res.state.pred)
+    pe = np.asarray(res.tree.path_edge)
+    bu = np.asarray(res.tree.bridge_u)
+    bv = np.asarray(res.tree.bridge_v)
+    bvalid = np.asarray(res.tree.bridge_valid)
+    out: List[FrozenSet[Tuple[int, int]]] = []
+    for i in range(n_lanes):
+        es: Set[Tuple[int, int]] = set()
+        for v in np.nonzero(pe[i])[0]:
+            a, b = int(pred[i, v]), int(v)
+            es.add((min(a, b), max(a, b)))
+        for j in np.nonzero(bvalid[i])[0]:
+            a, b = int(bu[i, j]), int(bv[i, j])
+            es.add((min(a, b), max(a, b)))
+        out.append(frozenset(es))
+    return out

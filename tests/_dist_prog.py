@@ -9,18 +9,16 @@ import numpy as np
 
 def main() -> None:
     import jax
-    from jax.sharding import AxisType
 
     assert len(jax.devices()) == 8, jax.devices()
 
+    from repro import compat
     from repro.core import ref
     from repro.core.dist_steiner import partition_edges, run_dist_steiner
     from repro.data.graphs import er_edges, rmat_edges
 
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
-    mesh3 = jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,) * 3
-    )
+    mesh2 = compat.make_mesh((2, 4), ("data", "model"))
+    mesh3 = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
     for trial in range(4):
         if trial % 2 == 0:

@@ -3,7 +3,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import from_edges, steiner_tree, tree_edge_list
 from repro.core import ref
@@ -11,7 +10,7 @@ from repro.core import ref
 from helpers import random_instance
 
 
-@pytest.mark.parametrize("mode", ["dense", "bucket"])
+@pytest.mark.parametrize("mode", ["dense", "bucket", "frontier"])
 @pytest.mark.parametrize("mst_algo", ["prim", "boruvka"])
 @pytest.mark.parametrize("trial", range(4))
 def test_pipeline_matches_mehlhorn(mode, mst_algo, trial):
@@ -67,27 +66,23 @@ def test_kmb_agrees_on_total_bound():
     assert d_kmb <= bound and d_meh <= bound
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    nv=st.integers(10, 36),
-    p=st.floats(0.15, 0.5),
-    nseeds=st.integers(2, 5),
-    rngseed=st.integers(0, 10**6),
-)
-def test_steiner_property(nv, p, nseeds, rngseed):
-    """Property: valid tree, D == Mehlhorn oracle, within 2-approx bound."""
-    from repro.data.graphs import er_edges
+def test_frontier_dispatch_accepts_prebuilt_ell():
+    """mode="frontier" through the steiner_tree front door, both with the
+    host-built default ELL view and a caller-supplied one."""
+    from repro.core import to_ell
 
-    src, dst, w, n = er_edges(nv, p, max_weight=10, seed=rngseed)
-    rng = np.random.default_rng(rngseed)
-    seeds = rng.choice(n, size=nseeds, replace=False).astype(np.int32)
-    edges = list(zip(src.tolist(), dst.tolist(), w.tolist()))
+    src, dst, w, n, seeds, edges = random_instance(1)
     g = from_edges(src, dst, w, n, pad_to=8)
-    res = steiner_tree(g, jnp.asarray(seeds))
-    d = float(res.tree.total_distance)
-    tset = tree_edge_list(res.state, res.tree)
-    assert ref.tree_is_valid(n, edges, seeds.tolist(), tset)
     _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
-    assert abs(d - d_ref) < 1e-3
-    opt = ref.dreyfus_wagner(n, edges, seeds.tolist())
-    assert opt - 1e-4 <= d <= 2.0 * (1 - 1 / nseeds) * opt + 1e-4
+    auto = steiner_tree(g, jnp.asarray(seeds), mode="frontier")
+    ell = to_ell(g, k=8, pad_rows_to=32)
+    pre = steiner_tree(g, jnp.asarray(seeds), mode="frontier", ell=ell)
+    assert abs(float(auto.tree.total_distance) - d_ref) < 1e-4
+    assert abs(float(pre.tree.total_distance) - d_ref) < 1e-4
+
+
+def test_unknown_mode_raises():
+    src, dst, w, n, seeds, _ = random_instance(0)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    with pytest.raises(ValueError, match="unknown mode"):
+        steiner_tree(g, jnp.asarray(seeds), mode="fifo")

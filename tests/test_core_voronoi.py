@@ -3,7 +3,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import from_edges, to_ell
 from repro.core import ref
@@ -68,46 +67,3 @@ def test_bucket_fewer_messages_than_dense():
     # strictly fewer generated messages AND fewer overwritten updates
     assert float(s_buck.messages) < float(s_dense.messages)
     assert float(s_buck.relaxations) <= float(s_dense.relaxations)
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(8, 40),
-    p=st.floats(0.1, 0.5),
-    nseeds=st.integers(2, 6),
-    rngseed=st.integers(0, 10**6),
-)
-def test_voronoi_property(n, p, nseeds, rngseed):
-    """Property: Voronoi invariants hold on arbitrary random graphs.
-
-    dist is a fixpoint of min-plus relaxation; lab is consistent along pred
-    chains; every reached vertex's pred chain terminates at its seed.
-    """
-    from repro.data.graphs import er_edges
-
-    src, dst, w, n_, seeds_all = *er_edges(n, p, max_weight=12, seed=rngseed), None
-    src, dst, w, n2 = src, dst, w, n
-    rng = np.random.default_rng(rngseed)
-    seeds = rng.choice(n, size=nseeds, replace=False).astype(np.int32)
-    g = from_edges(src, dst, w, n, pad_to=8)
-    st_, _ = voronoi_cells(g, jnp.asarray(seeds), mode="bucket")
-    dist = np.asarray(st_.dist)
-    lab = np.asarray(st_.lab)
-    pred = np.asarray(st_.pred)
-    # (1) fixpoint: no edge can improve any vertex
-    for u, v, wt in zip(src.tolist(), dst.tolist(), w.tolist()):
-        if np.isfinite(dist[u]):
-            assert dist[v] <= dist[u] + wt + 1e-5
-        if np.isfinite(dist[v]):
-            assert dist[u] <= dist[v] + wt + 1e-5
-    # (2) label consistency + chain termination
-    for v in range(n):
-        if not np.isfinite(dist[v]):
-            continue
-        assert lab[v] == lab[pred[v]]
-        x, hops = v, 0
-        while pred[x] != x and hops <= n + 1:
-            assert dist[pred[x]] < dist[x] + 1e-9
-            x = int(pred[x])
-            hops += 1
-        assert x == seeds[lab[v]]

@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the Voronoi and Steiner pipelines.
+
+Kept in their own module so the module-level ``importorskip`` skips ONLY
+the property tests on environments without ``hypothesis`` — the
+deterministic core tests in test_core_voronoi.py / test_core_steiner.py
+run everywhere.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_edges, steiner_tree, tree_edge_list
+from repro.core import ref
+from repro.core.voronoi import voronoi_cells
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(8, 40),
+    p=st.floats(0.1, 0.5),
+    nseeds=st.integers(2, 6),
+    rngseed=st.integers(0, 10**6),
+)
+def test_voronoi_property(n, p, nseeds, rngseed):
+    """Property: Voronoi invariants hold on arbitrary random graphs.
+
+    dist is a fixpoint of min-plus relaxation; lab is consistent along pred
+    chains; every reached vertex's pred chain terminates at its seed.
+    """
+    from repro.data.graphs import er_edges
+
+    src, dst, w, _ = er_edges(n, p, max_weight=12, seed=rngseed)
+    rng = np.random.default_rng(rngseed)
+    seeds = rng.choice(n, size=nseeds, replace=False).astype(np.int32)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    st_, _ = voronoi_cells(g, jnp.asarray(seeds), mode="bucket")
+    dist = np.asarray(st_.dist)
+    lab = np.asarray(st_.lab)
+    pred = np.asarray(st_.pred)
+    # (1) fixpoint: no edge can improve any vertex
+    for u, v, wt in zip(src.tolist(), dst.tolist(), w.tolist()):
+        if np.isfinite(dist[u]):
+            assert dist[v] <= dist[u] + wt + 1e-5
+        if np.isfinite(dist[v]):
+            assert dist[u] <= dist[v] + wt + 1e-5
+    # (2) label consistency + chain termination
+    for v in range(n):
+        if not np.isfinite(dist[v]):
+            continue
+        assert lab[v] == lab[pred[v]]
+        x, hops = v, 0
+        while pred[x] != x and hops <= n + 1:
+            assert dist[pred[x]] < dist[x] + 1e-9
+            x = int(pred[x])
+            hops += 1
+        assert x == seeds[lab[v]]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nv=st.integers(10, 36),
+    p=st.floats(0.15, 0.5),
+    nseeds=st.integers(2, 5),
+    rngseed=st.integers(0, 10**6),
+)
+def test_steiner_property(nv, p, nseeds, rngseed):
+    """Property: valid tree, D == Mehlhorn oracle, within 2-approx bound."""
+    from repro.data.graphs import er_edges
+
+    src, dst, w, n = er_edges(nv, p, max_weight=10, seed=rngseed)
+    rng = np.random.default_rng(rngseed)
+    seeds = rng.choice(n, size=nseeds, replace=False).astype(np.int32)
+    edges = list(zip(src.tolist(), dst.tolist(), w.tolist()))
+    g = from_edges(src, dst, w, n, pad_to=8)
+    res = steiner_tree(g, jnp.asarray(seeds))
+    d = float(res.tree.total_distance)
+    tset = tree_edge_list(res.state, res.tree)
+    assert ref.tree_is_valid(n, edges, seeds.tolist(), tset)
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    assert abs(d - d_ref) < 1e-3
+    opt = ref.dreyfus_wagner(n, edges, seeds.tolist())
+    assert opt - 1e-4 <= d <= 2.0 * (1 - 1 / nseeds) * opt + 1e-4

@@ -1,0 +1,205 @@
+"""Serving subsystem: batched pipeline, inert padding, cache, scheduler."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import from_edges, steiner_tree
+from repro.core import ref
+from repro.serve import (
+    ServeConfig,
+    SteinerServer,
+    canonical_key,
+    choose_bucket,
+    pad_seed_set,
+    plan_query,
+    steiner_tree_batch,
+)
+
+from helpers import random_instance
+
+
+def _graph(trial):
+    src, dst, w, n, seeds, edges = random_instance(trial)
+    return from_edges(src, dst, w, n, pad_to=8), n, edges
+
+
+# ----------------------------------------------------------------------------
+# plan.py
+# ----------------------------------------------------------------------------
+
+
+def test_canonical_key_sorts_and_dedupes():
+    assert canonical_key([5, 3, 5, 9, 3]) == (3, 5, 9)
+
+
+def test_choose_bucket_ladder():
+    assert choose_bucket(2, (8, 16)) == 8
+    assert choose_bucket(8, (8, 16)) == 8
+    assert choose_bucket(9, (8, 16)) == 16
+    with pytest.raises(ValueError):
+        choose_bucket(17, (8, 16))
+
+
+def test_pad_seed_set_duplicates_first():
+    out = pad_seed_set((3, 7, 11), 8)
+    assert out.tolist() == [3, 7, 11, 3, 3, 3, 3, 3]
+
+
+def test_plan_query_rejects_degenerate():
+    with pytest.raises(ValueError):
+        plan_query([4, 4, 4])  # < 2 distinct seeds
+
+
+# ----------------------------------------------------------------------------
+# batch.py — batched == single == oracle
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dense", "bucket"])
+@pytest.mark.parametrize("mst_algo", ["prim", "boruvka"])
+def test_batched_matches_single_and_oracle(mode, mst_algo):
+    g, n, edges = _graph(0)
+    rng = np.random.default_rng(7)
+    B, S = 4, 5
+    batch = np.stack(
+        [rng.choice(n, size=S, replace=False) for _ in range(B)]
+    ).astype(np.int32)
+    res = steiner_tree_batch(
+        g, jnp.asarray(batch), mode=mode, mst_algo=mst_algo
+    )
+    totals = np.asarray(res.tree.total_distance)
+    assert totals.shape == (B,)
+    for i in range(B):
+        single = steiner_tree(
+            g, jnp.asarray(batch[i]), mode=mode, mst_algo=mst_algo
+        )
+        # bitwise: same pipeline, one vmap lane vs standalone trace
+        assert totals[i] == float(single.tree.total_distance)
+        _, d_ref = ref.mehlhorn_ref(n, edges, batch[i].tolist())
+        assert abs(totals[i] - d_ref) < 1e-4
+
+
+def test_batch_rejects_rank1():
+    g, n, _ = _graph(0)
+    with pytest.raises(ValueError):
+        steiner_tree_batch(g, jnp.arange(5, dtype=jnp.int32))
+
+
+# ----------------------------------------------------------------------------
+# inert padding — the planner's correctness contract
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mst_algo", ["prim", "boruvka"])
+@pytest.mark.parametrize("trial", range(3))
+def test_padded_duplicate_seeds_inert(trial, mst_algo):
+    g, n, edges = _graph(trial)
+    rng = np.random.default_rng(100 + trial)
+    seeds = np.sort(rng.choice(n, size=5, replace=False)).astype(np.int32)
+    base = steiner_tree(g, jnp.asarray(seeds), mst_algo=mst_algo)
+    padded = pad_seed_set(seeds.tolist(), 8)
+    res = steiner_tree(g, jnp.asarray(padded), mst_algo=mst_algo)
+    assert float(res.tree.total_distance) == float(base.tree.total_distance)
+    assert int(res.tree.num_edges) == int(base.tree.num_edges)
+    # Voronoi state is untouched by padding: duplicate indices own nothing
+    np.testing.assert_array_equal(
+        np.asarray(res.state.lab), np.asarray(base.state.lab)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.state.dist), np.asarray(base.state.dist)
+    )
+
+
+# ----------------------------------------------------------------------------
+# engine.py — scheduler, cache, randomized-stream equivalence
+# ----------------------------------------------------------------------------
+
+
+def _server(g, **kw):
+    cfg = ServeConfig(
+        buckets=kw.pop("buckets", (8, 16)),
+        max_batch=kw.pop("max_batch", 3),
+        materialize_edges=kw.pop("materialize_edges", True),
+        **kw,
+    )
+    return SteinerServer(g, cfg)
+
+
+def test_randomized_stream_matches_single_query():
+    """Acceptance: every streamed query == standalone steiner_tree."""
+    g, n, edges = _graph(1)
+    srv = _server(g)
+    rng = np.random.default_rng(0)
+    queries = [
+        rng.choice(n, size=int(rng.integers(2, 14)), replace=False).tolist()
+        for _ in range(25)
+    ]
+    # interleave repeats to exercise the cache path in the same stream
+    stream = queries + [queries[i] for i in rng.integers(0, 25, size=10)]
+    results = srv.query_many(stream)
+    assert len(results) == 35
+    for q, r in zip(stream, results):
+        canon = np.asarray(canonical_key(q), np.int32)
+        single = steiner_tree(g, jnp.asarray(canon))
+        assert r.total_distance == float(single.tree.total_distance)
+        assert r.num_edges == int(single.tree.num_edges)
+        assert ref.tree_is_valid(n, edges, canon.tolist(), r.edges)
+
+
+def test_cache_returns_identical_tree_on_repeat():
+    g, n, _ = _graph(2)
+    srv = _server(g)
+    q = [1, 9, 17, 25]
+    r1 = srv.query(q)
+    r2 = srv.query(list(reversed(q)))  # permuted repeat
+    r3 = srv.query([1, 9, 9, 17, 25, 1])  # with duplicates
+    assert not r1.from_cache and r2.from_cache and r3.from_cache
+    assert r1.key == r2.key == r3.key
+    assert r1.total_distance == r2.total_distance == r3.total_distance
+    assert r1.edges == r2.edges == r3.edges
+    st = srv.stats()
+    assert st["completed"] == 3 and st["cache_hits"] == 2
+
+
+def test_duplicate_keys_in_one_batch_share_a_lane():
+    g, n, _ = _graph(2)
+    srv = _server(g)
+    res = srv.query_many([[2, 30, 7], [7, 2, 30], [2, 7, 30]])
+    assert len({r.total_distance for r in res}) == 1
+    assert srv.stats()["batches_per_bucket"][8] == 1  # one launch total
+
+
+def test_lru_eviction():
+    g, n, _ = _graph(2)
+    srv = _server(g, cache_capacity=2)
+    a, b, c = [1, 5], [2, 6], [3, 7]
+    srv.query(a)
+    srv.query(b)
+    srv.query(c)  # evicts a
+    assert len(srv.cache) == 2
+    assert not srv.query(a).from_cache  # recomputed
+    assert srv.query(a).from_cache
+
+
+def test_cache_disabled():
+    g, n, _ = _graph(2)
+    srv = _server(g, cache_capacity=0)
+    q = [4, 12, 20]
+    assert not srv.query(q).from_cache
+    assert not srv.query(q).from_cache
+    assert srv.stats()["cache_hits"] == 0
+
+
+def test_stats_counters():
+    g, n, _ = _graph(1)
+    srv = _server(g, max_batch=4)
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        srv.submit(rng.choice(n, size=4, replace=False).tolist())
+    srv.flush()
+    st = srv.stats()
+    assert st["completed"] == 6
+    assert st["lanes_run"] % 4 == 0
+    assert st["latency_p99_ms"] >= st["latency_p50_ms"] >= 0.0
+    assert st["qps"] > 0

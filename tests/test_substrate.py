@@ -99,11 +99,12 @@ def test_behavior_stream_targets_share_cluster():
 def test_elastic_restore_changes_sharding(tmp_path):
     """Restore onto an explicit sharding (mesh relayout path)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax.sharding import AxisType
+
+    from repro import compat
 
     tree = {"w": jnp.arange(16, dtype=jnp.float32)}
     save_pytree(tree, tmp_path / "e.npz")
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data"))}
     back = load_pytree(tree, tmp_path / "e.npz", shardings=sh)
     assert back["w"].sharding == sh["w"]
