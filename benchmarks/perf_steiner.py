@@ -1,37 +1,157 @@
-"""§Perf hillclimb driver for the Steiner cells (paper-representative pair).
+"""Perf drivers for the Steiner core pipeline.
 
-Compiles dry-run variants of the ukw_1k / clw_10k cells and extracts the
-per-round roofline terms for each candidate change:
+Two benches:
 
-  base        : bucket, fused f32 gather, local_steps=1, Prim MST
-  unfused     : two separate (dist, lab) gathers        [ablation]
-  lab_i16     : int16 label gather (6 B/vertex/round)
-  ls2 / ls4   : 2 / 4 local relaxations per exchange (async amortization);
-                wire bytes per *relaxation* fall by ~T
-  boruvka     : parallel MST (replicated-compute trade)
+``--bench handle`` (default)
+    Real execution on the local backend: for each Voronoi mode
+    (dense / bucket / frontier) measure the COLD first solve (trace +
+    compile + run) against steady-state solves through a prepared
+    :class:`repro.solver.SteinerSolver` handle, plus the one-time
+    ``prepare()`` cost (ELL build for frontier).  Writes
+    ``BENCH_steiner.json`` at the repo root (same shape as
+    ``BENCH_serve.json``) so the perf trajectory covers the core
+    pipeline, not just serving.
 
-Usage: PYTHONPATH=src python -m benchmarks.perf_steiner [--cell ukw_1k]
-Writes benchmarks/results/perf/steiner_<cell>.json.
+``--bench roofline``
+    §Perf hillclimb: compiles dry-run variants of the ukw_1k / clw_10k
+    production cells on a forced 512-device host mesh and extracts the
+    per-round roofline terms for each candidate change:
+
+      base        : bucket, fused f32 gather, local_steps=1, Prim MST
+      unfused     : two separate (dist, lab) gathers        [ablation]
+      lab_i16     : int16 label gather (6 B/vertex/round)
+      ls2 / ls4   : 2 / 4 local relaxations per exchange
+      boruvka     : parallel MST (replicated-compute trade)
+      2d          : (src × dst)-block 2D partition
+
+    Writes benchmarks/results/perf/steiner_<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_steiner [--scale 10] [--queries 12]
+  PYTHONPATH=src python -m benchmarks.perf_steiner --bench roofline [--cell ukw_1k]
 """
-
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+import os
+import platform
+import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
+ROOT = Path(__file__).resolve().parent.parent
+OUT_HANDLE = ROOT / "BENCH_steiner.json"
+OUT_ROOFLINE = Path(__file__).resolve().parent / "results" / "perf"
 
-OUT = Path(__file__).resolve().parent / "results" / "perf"
+MODES = ("dense", "bucket", "frontier")
+
+
+# ----------------------------------------------------------------------------
+# --bench handle: cold trace vs prepared-handle solve
+# ----------------------------------------------------------------------------
+
+
+def run_handle_bench(args) -> None:
+    import numpy as np
+
+    from repro.core.graph import from_edges
+    from repro.data.graphs import rmat_edges, select_seeds
+    from repro.solver import SolverConfig, SteinerSolver, trace_count
+
+    rng_seed = args.seed
+    t0 = time.perf_counter()
+    src, dst, w, n = rmat_edges(
+        args.scale, args.edge_factor, max_weight=100, seed=rng_seed
+    )
+    g = from_edges(src, dst, w, n, pad_to=8)
+    t_build = time.perf_counter() - t0
+    print(
+        f"graph: RMAT scale={args.scale} n={n} "
+        f"directed_edges={int(g.num_edges)} build={t_build:.2f}s",
+        flush=True,
+    )
+
+    # one fixed |S| per run: every mode sees identical queries
+    seed_sets = [
+        select_seeds(n, src, dst, args.num_seeds, strategy="uniform",
+                     seed=1000 + q)
+        for q in range(args.queries)
+    ]
+
+    mode_rows = {}
+    for mode in MODES:
+        cfg = SolverConfig(backend="single", mode=mode)
+        t0 = time.perf_counter()
+        handle = SteinerSolver(cfg).prepare(g)
+        t_prepare = time.perf_counter() - t0
+
+        c0 = trace_count()
+        t0 = time.perf_counter()
+        first = handle.solve(seed_sets[0])
+        t_cold = time.perf_counter() - t0
+
+        lat = []
+        for s in seed_sets:
+            t0 = time.perf_counter()
+            out = handle.solve(s)
+            lat.append(time.perf_counter() - t0)
+        assert out.total_distance > 0
+        retraces = trace_count() - c0 - 1  # the cold solve traces once
+        lat_ms = np.asarray(lat) * 1e3
+        row = {
+            "prepare_s": round(t_prepare, 4),
+            "cold_solve_s": round(t_cold, 4),
+            "warm_p50_ms": float(np.percentile(lat_ms, 50)),
+            "warm_p99_ms": float(np.percentile(lat_ms, 99)),
+            "cold_over_warm": round(t_cold * 1e3 / float(np.median(lat_ms)), 1),
+            "retraces_after_cold": int(retraces),
+            "total_distance_q0": float(first.total_distance),
+        }
+        mode_rows[mode] = row
+        print(
+            f"mode={mode:8s} prepare={row['prepare_s']:7.3f}s "
+            f"cold={row['cold_solve_s']:6.3f}s "
+            f"warm_p50={row['warm_p50_ms']:7.2f}ms "
+            f"cold/warm={row['cold_over_warm']:6.1f}x "
+            f"retraces={retraces}",
+            flush=True,
+        )
+
+    import jax
+
+    record = {
+        "bench": "steiner",
+        "workload": {
+            "graph": f"rmat_scale{args.scale}_ef{args.edge_factor}",
+            "n_vertices": int(n),
+            "n_directed_edges": int(g.num_edges),
+            "num_seeds": args.num_seeds,
+            "queries": args.queries,
+            "backend": "single",
+            "seed": rng_seed,
+        },
+        "env": {
+            "platform": platform.platform(),
+            "backend": jax.default_backend(),
+        },
+        "modes": mode_rows,
+    }
+    OUT_HANDLE.write_text(json.dumps(record, indent=1))
+    print(f"wrote {OUT_HANDLE}")
+
+
+# ----------------------------------------------------------------------------
+# --bench roofline: production-mesh variant hillclimb
+# ----------------------------------------------------------------------------
 
 
 def run_variant(cell: str, name: str, **cfg_kw) -> dict:
+    import jax
+    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro import compat
     from repro.configs import get_arch
+    from repro.configs.steiner import solver_preset
     from repro.core.dist_steiner import DistSteinerConfig, make_dist_steiner
     from repro.core.dist_steiner_2d import make_dist_steiner_2d
     from repro.launch import roofline as rl
@@ -40,6 +160,7 @@ def run_variant(cell: str, name: str, **cfg_kw) -> dict:
     mesh = make_production_mesh(multi_pod=False)
     arch = get_arch("steiner")
     shape = [s for s in arch.shapes if s.name == cell][0]
+    preset = solver_preset(cell)
     dp = ("data",)
     n_blocks = mesh.shape["model"]
     n_rep = mesh.shape["data"]
@@ -48,12 +169,17 @@ def run_variant(cell: str, name: str, **cfg_kw) -> dict:
     eb = -(-e // (n_rep * n_blocks) // 8 + 1) * 8
     total_e = n_rep * n_blocks * eb
     partition_2d = cfg_kw.pop("partition_2d", False)
-    cfg = DistSteinerConfig(n=n, nb=nb, num_seeds=S, max_iters=10_000, **cfg_kw)
+    base = dict(
+        mode=preset.mode, mst_algo=preset.mst_algo, max_iters=10_000
+    )
+    base.update(cfg_kw)
+    cfg = DistSteinerConfig(n=n, nb=nb, num_seeds=S, **base)
     with compat.set_mesh(mesh):
         if partition_2d:
             nf = -(-(-(-n // (n_rep * n_blocks))) // 8) * 8
             fn = make_dist_steiner_2d(
-                mesh, n=n, nf=nf, num_seeds=S, max_iters=10_000, **cfg_kw
+                mesh, n=n, nf=nf, num_seeds=S, max_iters=10_000,
+                mode=preset.mode, mst_algo=preset.mst_algo,
             )
         else:
             fn = make_dist_steiner(mesh, cfg, replica_axes=dp)
@@ -68,7 +194,7 @@ def run_variant(cell: str, name: str, **cfg_kw) -> dict:
         compiled = lowered.compile()
     roof = rl.analyze(compiled, model_flops_total=5.0 * e, n_chips=256)
     mem = rl.memory_report(compiled)
-    ls = cfg_kw.get("local_steps", 1)
+    ls = base.get("local_steps", 1)
     row = roof.row()
     row["wire_bytes_per_relax_pass"] = roof.bytes_wire / ls
     row["t_total_per_relax_pass"] = (
@@ -79,11 +205,7 @@ def run_variant(cell: str, name: str, **cfg_kw) -> dict:
             "peak_gb": mem["peak_est_gb"]}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", default="ukw_1k")
-    ap.add_argument("--variants", default="base,unfused,lab_i16,ls2,ls4,boruvka")
-    args = ap.parse_args()
+def run_roofline_bench(args) -> None:
     variants = {
         "base": {},
         "unfused": dict(fuse_gather=False),
@@ -94,7 +216,7 @@ def main() -> None:
         "boruvka": dict(mst_algo="boruvka"),
         "2d": dict(partition_2d=True),
     }
-    OUT.mkdir(parents=True, exist_ok=True)
+    OUT_ROOFLINE.mkdir(parents=True, exist_ok=True)
     rows = []
     for name in args.variants.split(","):
         r = run_variant(args.cell, name, **variants[name])
@@ -107,7 +229,30 @@ def main() -> None:
             f"peak={r['peak_gb']:.1f}GB",
             flush=True,
         )
-    (OUT / f"steiner_{args.cell}.json").write_text(json.dumps(rows, indent=1))
+    (OUT_ROOFLINE / f"steiner_{args.cell}.json").write_text(
+        json.dumps(rows, indent=1)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="handle", choices=("handle", "roofline"))
+    # handle bench
+    ap.add_argument("--scale", type=int, default=10, help="RMAT n = 2^scale")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--num-seeds", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    # roofline bench
+    ap.add_argument("--cell", default="ukw_1k")
+    ap.add_argument("--variants", default="base,unfused,lab_i16,ls2,ls4,boruvka")
+    args = ap.parse_args()
+    if args.bench == "roofline":
+        # must land before the first jax import in this process
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        run_roofline_bench(args)
+    else:
+        run_handle_bench(args)
 
 
 if __name__ == "__main__":

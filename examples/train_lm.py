@@ -10,7 +10,6 @@ latest checkpoint and converge to the same trajectory.
 """
 
 import argparse
-import dataclasses
 
 from repro.configs.base import LMConfig
 from repro.launch.train import TrainConfig, train

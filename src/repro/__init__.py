@@ -9,6 +9,9 @@ A production-grade JAX reproduction (and TPU-native extension) of
 Package layout
 --------------
 core/         the paper's contribution: Voronoi-cell based 2-approx Steiner
+solver/       unified solver API: one config, backend registry, reusable
+              compiled executables (the single front door)
+serve/        batched query serving: shape buckets, micro-batching, LRU cache
 kernels/      Pallas TPU kernels for the relaxation hot loop
 models/       assigned architecture zoo (LM / GNN / RecSys)
 configs/      one config per assigned architecture (+ the paper's own)

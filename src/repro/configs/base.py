@@ -9,7 +9,7 @@ multi-pod dry-run — no host allocation ever happens for the full configs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

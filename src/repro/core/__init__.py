@@ -5,7 +5,14 @@ Distributed (shard_map) pipeline: :mod:`repro.core.dist_steiner`.
 Numpy oracles (Dijkstra / Mehlhorn / KMB / exact): :mod:`repro.core.ref`.
 """
 
-from repro.core.graph import EllGraph, Graph, from_edges, sort_by_dst, to_ell
+from repro.core.graph import (
+    EllGraph,
+    Graph,
+    ell_view_cached,
+    from_edges,
+    sort_by_dst,
+    to_ell,
+)
 from repro.core.steiner import (
     SteinerResult,
     finish_pipeline,
@@ -23,6 +30,7 @@ from repro.core.voronoi import (
 __all__ = [
     "EllGraph",
     "Graph",
+    "ell_view_cached",
     "from_edges",
     "sort_by_dst",
     "to_ell",

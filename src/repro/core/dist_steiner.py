@@ -32,8 +32,7 @@ perf loop iterates on.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -492,42 +491,17 @@ class DistSteinerResult:
         return out
 
 
-def run_dist_steiner(
-    mesh,
-    part: Partition,
-    seeds: np.ndarray,
-    *,
-    vert_axis: str = "model",
-    replica_axes: Sequence[str] = ("data",),
-    **cfg_kw,
-) -> DistSteinerResult:
-    """Convenience wrapper: partition → device_put → jitted pipeline → host."""
-    from jax.sharding import NamedSharding
-
-    cfg = DistSteinerConfig(
-        n=part.n, nb=part.nb, num_seeds=len(seeds), **cfg_kw
-    )
-    fn = make_dist_steiner(
-        mesh, cfg, vert_axis=vert_axis, replica_axes=replica_axes
-    )
-    edge_spec = _spec((*tuple(replica_axes), vert_axis))
-    put = lambda x, s: jax.device_put(x, NamedSharding(mesh, s))
-    args = (
-        put(part.src, edge_spec),
-        put(part.dst, edge_spec),
-        put(part.w, edge_spec),
-        put(np.asarray(seeds, np.int32), _spec()),
-    )
-    out = fn(*args)
+def result_from_device(out, n: int) -> DistSteinerResult:
+    """Converts the raw 12-tuple pipeline output to a host-side result."""
     (dist, lab, pred, marked, path_edge, bu, bv, bw, bvalid, total, ne, stats) = [
         np.asarray(x) for x in out
     ]
     return DistSteinerResult(
-        dist=dist[: part.n],
-        lab=lab[: part.n],
-        pred=pred[: part.n],
-        marked=marked[: part.n],
-        path_edge=path_edge[: part.n],
+        dist=dist[:n],
+        lab=lab[:n],
+        pred=pred[:n],
+        marked=marked[:n],
+        path_edge=path_edge[:n],
         bridge_u=bu,
         bridge_v=bv,
         bridge_w=bw,
@@ -537,4 +511,38 @@ def run_dist_steiner(
         iterations=int(stats[0]),
         relaxations=float(stats[1]),
         messages=float(stats[2]),
+    )
+
+
+def run_dist_steiner(
+    mesh,
+    part: Partition,
+    seeds: np.ndarray,
+    *,
+    vert_axis: str = "model",
+    replica_axes: Sequence[str] = ("data",),
+    **cfg_kw,
+) -> DistSteinerResult:
+    """Convenience wrapper: partition → device_put → jitted pipeline → host.
+
+    .. deprecated::
+        Thin shim over the unified solver — delegates to the ``"mesh1d"``
+        backend of :mod:`repro.solver` (``SolverConfig(backend="mesh1d")``
+        → ``SteinerSolver.prepare(graph)`` → ``handle.solve(seeds)``),
+        which additionally reuses the device-placed partition and compiled
+        executable across queries.  Kept for callers that already hold a
+        ``(mesh, Partition)`` pair; each call re-places the edge arrays
+        and re-traces.
+    """
+    from repro.solver.config import SolverConfig
+    from repro.solver.registry import get_backend
+
+    cfg = SolverConfig(backend="mesh1d", **cfg_kw)
+    return get_backend("mesh1d").solve_prepared(
+        cfg,
+        mesh,
+        part,
+        np.asarray(seeds, np.int32),
+        vert_axis=vert_axis,
+        replica_axes=tuple(replica_axes),
     )

@@ -24,7 +24,6 @@ engine and the numpy Dijkstra oracle (tested).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -293,8 +292,6 @@ def make_dist_steiner_2d(
         return (dist_l, lab_l, pred_l, marked_l, path_edge_l,
                 bu, bv, bw, bvalid, total, nedges, stats)
 
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     espec = P((row_axis, col_axis))
     st = P((row_axis, col_axis))
     rep = P()
@@ -312,38 +309,26 @@ def make_dist_steiner_2d(
 
 
 def run_dist_steiner_2d(mesh, part: Partition2D, seeds, **kw):
-    """Host wrapper mirroring run_dist_steiner (1D)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    """Host wrapper mirroring run_dist_steiner (1D).
 
-    from repro.core.dist_steiner import DistSteinerResult
+    .. deprecated::
+        Thin shim over the unified solver — delegates to the ``"mesh2d"``
+        backend of :mod:`repro.solver` (``SolverConfig(backend="mesh2d")``
+        → ``SteinerSolver.prepare(graph)`` → ``handle.solve(seeds)``),
+        which additionally reuses the device-placed partition and compiled
+        executable across queries.
+    """
+    from repro.solver.config import SolverConfig
+    from repro.solver.registry import get_backend
 
-    fn = make_dist_steiner_2d(
-        mesh, n=part.n, nf=part.nf, num_seeds=len(seeds), **kw
-    )
-    espec = NamedSharding(mesh, P(("data", "model")))
-    rep = NamedSharding(mesh, P())
-    args = (
-        jax.device_put(part.src_row, espec),
-        jax.device_put(part.dst_col, espec),
-        jax.device_put(part.w, espec),
-        jax.device_put(np.asarray(seeds, np.int32), rep),
-    )
-    out = [np.asarray(x) for x in fn(*args)]
-    (dist, lab, pred, marked, path_edge, bu, bv, bw, bvalid, total, ne,
-     stats) = out
-    return DistSteinerResult(
-        dist=dist[: part.n],
-        lab=lab[: part.n],
-        pred=pred[: part.n],
-        marked=marked[: part.n],
-        path_edge=path_edge[: part.n],
-        bridge_u=bu,
-        bridge_v=bv,
-        bridge_w=bw,
-        bridge_valid=bvalid,
-        total_distance=float(total),
-        num_edges=int(ne),
-        iterations=int(stats[0]),
-        relaxations=float(stats[1]),
-        messages=float(stats[2]),
+    row_axis = kw.pop("row_axis", "data")
+    col_axis = kw.pop("col_axis", "model")
+    cfg = SolverConfig(backend="mesh2d", **kw)
+    return get_backend("mesh2d").solve_prepared(
+        cfg,
+        mesh,
+        part,
+        np.asarray(seeds, np.int32),
+        row_axis=row_axis,
+        col_axis=col_axis,
     )

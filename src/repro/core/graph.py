@@ -18,6 +18,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Tuple
 
 import jax
@@ -166,6 +167,39 @@ def to_ell(g: Graph, k: int, *, pad_rows_to: int = 1) -> EllGraph:
     return EllGraph(
         nbr=jnp.asarray(nbr), wgt=jnp.asarray(wgt), row2v=jnp.asarray(row2v), n=g.n
     )
+
+
+_ELL_MEMO_CAP = 16
+_ell_memo: "dict[tuple[int, int], tuple[weakref.ref, EllGraph]]" = {}
+
+
+def ell_view_cached(g: Graph, k: int) -> EllGraph:
+    """Memoized :func:`to_ell` keyed on ``(id(g), k)``.
+
+    ``to_ell`` is O(E) host Python — far more expensive than the solve it
+    feeds when queries repeat against one resident graph.  The memo holds
+    only a weak reference to ``g`` (so retiring a graph frees its O(E)
+    arrays and views) and validates it against the ``id()`` key, which may
+    be reused after garbage collection; the table is bounded at
+    ``_ELL_MEMO_CAP`` entries (FIFO eviction).
+    """
+    key = (id(g), int(k))
+    hit = _ell_memo.get(key)
+    if hit is not None and hit[0]() is g:
+        return hit[1]
+    ell = to_ell(g, k)
+    while len(_ell_memo) >= _ELL_MEMO_CAP:
+        _ell_memo.pop(next(iter(_ell_memo)))
+
+    def _drop(ref, key=key):
+        # collected graph → free its view immediately; guard against the
+        # key having been rebound to a new graph with a reused id()
+        cur = _ell_memo.get(key)
+        if cur is not None and cur[0] is ref:
+            del _ell_memo[key]
+
+    _ell_memo[key] = (weakref.ref(g, _drop), ell)
+    return ell
 
 
 # ----------------------------------------------------------------------------

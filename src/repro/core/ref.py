@@ -14,7 +14,6 @@ validated against them edge-for-edge (tree validity + total distance).
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Dict, List, Sequence, Set, Tuple
 
 import numpy as np

@@ -16,12 +16,15 @@ Every stage is batch-safe: :func:`run_pipeline` is the unjitted pipeline
 body, safe to compose under ``jax.vmap`` / ``jax.jit`` — the multi-query
 serving layer (:mod:`repro.serve.batch`) vmaps it over a leading query
 axis against one resident graph.
+
+The jitted executables themselves live in :mod:`repro.solver.backends`
+(the unified solver registry); :func:`steiner_tree` below is a thin
+delegating shim kept for source compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -31,7 +34,7 @@ from repro.core import distance_graph as dgmod
 from repro.core import mst as mstmod
 from repro.core import tree as treemod
 from repro.core import voronoi as vmod
-from repro.core.graph import EllGraph, Graph, to_ell
+from repro.core.graph import EllGraph, Graph
 
 
 @jax.tree_util.register_dataclass
@@ -79,58 +82,15 @@ def run_pipeline(
 ) -> SteinerResult:
     """Unjitted full pipeline over the COO graph (modes "dense"/"bucket").
 
-    This is the trace-level entry point: :func:`steiner_tree` jits it for
-    the one-query case and :func:`repro.serve.batch.steiner_tree_batch`
-    vmaps it over a (B, S) seed batch.
+    This is the trace-level entry point: the solver backends
+    (:mod:`repro.solver.backends`) jit it for the one-query case
+    (``_exec_single_coo``) and vmap it over a (B, S) seed batch
+    (``_exec_batch``); :func:`steiner_tree` and
+    :func:`repro.serve.batch.steiner_tree_batch` are shims over those.
     """
     S = int(num_seeds if num_seeds is not None else seeds.shape[0])
     st, stats = vmod.voronoi_cells(
         g, seeds, mode=mode, delta=delta, max_iters=max_iters
-    )
-    return finish_pipeline(g, st, stats, S, mst_algo)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("mode", "mst_algo", "max_iters", "num_seeds")
-)
-def _steiner_coo(
-    g: Graph,
-    seeds: jax.Array,
-    *,
-    num_seeds: Optional[int],
-    mode: str,
-    mst_algo: str,
-    delta: Optional[float],
-    max_iters: Optional[int],
-) -> SteinerResult:
-    return run_pipeline(
-        g,
-        seeds,
-        num_seeds=num_seeds,
-        mode=mode,
-        mst_algo=mst_algo,
-        delta=delta,
-        max_iters=max_iters,
-    )
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("mst_algo", "max_iters", "num_seeds", "frontier_size"),
-)
-def _steiner_frontier(
-    g: Graph,
-    ell: EllGraph,
-    seeds: jax.Array,
-    *,
-    num_seeds: Optional[int],
-    mst_algo: str,
-    frontier_size: int,
-    max_iters: Optional[int],
-) -> SteinerResult:
-    S = int(num_seeds if num_seeds is not None else seeds.shape[0])
-    st, stats = vmod.voronoi_cells_frontier(
-        ell, seeds, frontier_size=frontier_size, max_rounds=max_iters
     )
     return finish_pipeline(g, st, stats, S, mst_algo)
 
@@ -150,6 +110,15 @@ def steiner_tree(
 ) -> SteinerResult:
     """Computes a 2-approximate Steiner minimal tree for (g, seeds).
 
+    .. deprecated::
+        Thin shim over the unified solver — delegates to the ``"single"``
+        backend of :mod:`repro.solver` (``SolverConfig(backend="single")``
+        → ``SteinerSolver.prepare(graph)`` → ``handle.solve(seeds)``).
+        The compiled executable is shared with the solver path, and a
+        repeated ``mode="frontier"`` call against the same ``g`` object
+        reuses a memoized ELL view (:func:`repro.core.graph.ell_view_cached`)
+        instead of paying the O(E) host-Python rebuild.
+
     Args:
       g: symmetric weighted graph (padded COO).
       seeds: (S,) int32 seed vertex ids.
@@ -158,37 +127,25 @@ def steiner_tree(
       mst_algo: "prim" (paper-faithful sequential analogue) | "boruvka".
       delta: bucket width (mode="bucket").
       max_iters: safety cap on relaxation rounds.
-      ell: prebuilt ELL adjacency for mode="frontier"; built on the host
-        from ``g`` when omitted (O(E) python — pass one in when issuing
-        repeated frontier queries against the same graph).
+      ell: prebuilt ELL adjacency for mode="frontier"; a memoized view
+        keyed on ``(id(g), ell_width)`` is used when omitted.
       ell_width: ELL row width when building the view here.
       frontier_size: top-K frontier rows per round (mode="frontier").
 
     Returns:
       SteinerResult; ``result.tree.total_distance`` is D(G_S).
     """
-    if mode == "frontier":
-        if ell is None:
-            ell = to_ell(g, ell_width)
-        return _steiner_frontier(
-            g,
-            ell,
-            seeds,
-            num_seeds=num_seeds,
-            mst_algo=mst_algo,
-            frontier_size=frontier_size,
-            max_iters=max_iters,
-        )
-    if mode not in ("dense", "bucket"):
-        raise ValueError(
-            f"unknown mode: {mode!r} (use 'dense' | 'bucket' | 'frontier')"
-        )
-    return _steiner_coo(
-        g,
-        seeds,
-        num_seeds=num_seeds,
+    from repro.solver.config import SolverConfig
+    from repro.solver.registry import get_backend
+
+    cfg = SolverConfig(
+        backend="single",
         mode=mode,
         mst_algo=mst_algo,
         delta=delta,
         max_iters=max_iters,
+        ell_width=ell_width,
+        frontier_size=frontier_size,
     )
+    S = int(num_seeds if num_seeds is not None else seeds.shape[0])
+    return get_backend("single").solve_raw(cfg, g, seeds, S, ell=ell)

@@ -318,9 +318,12 @@ def _recsys_cell(arch, shape: ShapeSpec, mesh, dp_axes):
 def _steiner_cell(arch, shape: ShapeSpec, mesh, dp_axes, multi_pod):
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.configs.steiner import solver_preset
     from repro.core.dist_steiner import DistSteinerConfig, make_dist_steiner
 
-    scfg = arch.model
+    # canonical per-workload SolverConfig preset — knobs come from ONE
+    # place (configs.steiner.SOLVER_PRESETS); only the mesh is ours
+    scfg = solver_preset(shape.name)
     n_blocks = mesh.shape["model"]
     n_rep = 1
     for ax in dp_axes:
@@ -338,7 +341,8 @@ def _steiner_cell(arch, shape: ShapeSpec, mesh, dp_axes, multi_pod):
         local_steps=scfg.local_steps,
         pair_chunks=scfg.pair_chunks,
         fuse_gather=scfg.fuse_gather,
-        max_iters=10_000,
+        lab_i16=scfg.lab_i16,
+        max_iters=scfg.max_iters,
     )
     fn = make_dist_steiner(mesh, cfg, replica_axes=dp_axes)
     espec = NamedSharding(mesh, P((*dp_axes, "model")))

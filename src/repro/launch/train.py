@@ -27,11 +27,9 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from pathlib import Path
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch

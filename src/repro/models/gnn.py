@@ -16,7 +16,6 @@ ops into sharded scatter-adds.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax

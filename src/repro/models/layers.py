@@ -9,8 +9,6 @@ S×S score matrix.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Optional
 
 import jax

@@ -13,7 +13,7 @@ lookups become all-to-all-style gathers XLA generates from the sharding.
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

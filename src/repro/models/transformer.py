@@ -16,9 +16,7 @@ Sharding strategy (single-pod mesh ("data", "model")):
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

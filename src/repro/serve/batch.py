@@ -1,12 +1,13 @@
 """vmap-batched Steiner pipeline — B seed-sets against one resident graph.
 
 The paper's workload is a network scientist issuing *repeated* seed-set
-queries against one fixed graph (§I). The one-shot
+queries against one fixed graph (§I).  The one-shot
 :func:`repro.core.steiner_tree` recompiles per |S| and runs queries
-serially; here we vmap the whole five-stage pipeline over a leading query
-axis, so a (B, S) batch shares one executable, one resident COO graph,
-and one XLA launch. Amortization, not approximation: every lane computes
-exactly what the single-query pipeline computes (bitwise — asserted in
+serially; the ``"batch"`` backend of :mod:`repro.solver` vmaps the whole
+five-stage pipeline over a leading query axis, so a (B, S) batch shares
+one executable, one resident COO graph, and one XLA launch.
+Amortization, not approximation: every lane computes exactly what the
+single-query pipeline computes (bitwise — asserted in
 ``tests/test_serve.py``).
 
 Compilation is keyed on the static (B, S) shape, so pair this with the
@@ -16,18 +17,14 @@ count at |buckets| instead of one per query shape.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 
 from repro.core.graph import Graph
-from repro.core.steiner import SteinerResult, run_pipeline
+from repro.core.steiner import SteinerResult
 
 
-@functools.partial(
-    jax.jit, static_argnames=("num_seeds", "mode", "mst_algo", "max_iters")
-)
 def steiner_tree_batch(
     g: Graph,
     seeds: jax.Array,
@@ -39,6 +36,12 @@ def steiner_tree_batch(
     max_iters: Optional[int] = None,
 ) -> SteinerResult:
     """Computes B Steiner trees at once over the shared graph ``g``.
+
+    .. deprecated::
+        Thin shim over the unified solver — delegates to the ``"batch"``
+        backend of :mod:`repro.solver` (``SolverConfig(backend="batch")``
+        → ``SteinerSolver.prepare(graph)`` → ``handle.solve(seed_batch)``)
+        and shares its compiled executable per static (B, S) shape.
 
     Args:
       g: symmetric weighted graph (padded COO), shared by every query.
@@ -54,19 +57,17 @@ def steiner_tree_batch(
       SteinerResult pytree with a leading (B,) axis on every array;
       ``result.tree.total_distance`` is (B,) f32.
     """
+    from repro.solver.config import SolverConfig
+    from repro.solver.registry import get_backend
+
     if seeds.ndim != 2:
         raise ValueError(f"seeds must be (B, S), got shape {seeds.shape}")
+    cfg = SolverConfig(
+        backend="batch",
+        mode=mode,
+        mst_algo=mst_algo,
+        delta=delta,
+        max_iters=max_iters,
+    )
     S = int(num_seeds if num_seeds is not None else seeds.shape[1])
-
-    def one(row: jax.Array) -> SteinerResult:
-        return run_pipeline(
-            g,
-            row,
-            num_seeds=S,
-            mode=mode,
-            mst_algo=mst_algo,
-            delta=delta,
-            max_iters=max_iters,
-        )
-
-    return jax.vmap(one)(seeds)
+    return get_backend("batch").solve_raw(cfg, g, seeds, S)

@@ -3,9 +3,9 @@
 The serving loop the ROADMAP's "heavy traffic" north star needs: queries
 arrive one at a time, the engine canonicalizes and bucket-pads them
 (:mod:`repro.serve.plan`), answers repeats from an LRU result cache, and
-drains the rest through the vmap-batched pipeline
-(:mod:`repro.serve.batch`) in fixed-shape micro-batches so the whole
-service runs on |buckets| warm executables.
+drains the rest through one prepared ``"batch"``-backend solver handle
+(:mod:`repro.solver`) in fixed-shape micro-batches so the whole service
+runs on |buckets| warm executables.
 
 Lifecycle::
 
@@ -18,9 +18,9 @@ Lifecycle::
 or one-shot: ``server.query([3, 17, 42])``. Counters (QPS, p50/p99
 latency, cache hit rate, padding waste) via ``server.stats()``.
 
-Future scaling PRs plug in here: sharded execution swaps
-``steiner_tree_batch`` for the ``dist_steiner`` pipeline behind the same
-queue; landmark caching and async prefetch hook the admission path.
+Future scaling PRs plug in here: sharded execution swaps the handle's
+backend ("batch" → "mesh1d") behind the same queue; landmark caching and
+async prefetch hook the admission path.
 """
 
 from __future__ import annotations
@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.serve import plan as planmod
-from repro.serve.batch import steiner_tree_batch
+from repro.solver import SolverConfig, SteinerSolver
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +112,18 @@ class SteinerServer:
     def __init__(self, g: Graph, config: ServeConfig = ServeConfig()):
         self.g = g
         self.config = config
+        # one prepared solver handle: every micro-batch launch dispatches
+        # to the "batch" backend's cached executables (one per bucket)
+        self._handle = SteinerSolver(
+            SolverConfig(
+                backend="batch",
+                mode=config.mode,
+                mst_algo=config.mst_algo,
+                delta=config.delta,
+                max_iters=config.max_iters,
+                batch_size=config.max_batch,
+            )
+        ).prepare(g)
         self.cache = LRUCache(config.cache_capacity)
         self._queues: Dict[int, "collections.deque[_Pending]"] = {
             b: collections.deque() for b in sorted(config.buckets)
@@ -169,7 +181,7 @@ class SteinerServer:
         for b in self.config.buckets:
             batch = np.tile(
                 planmod.pad_seed_set((min(u, v), max(u, v)), b),
-                (self.config.max_batch, 1),
+                (self._handle.config.batch_size, 1),
             )
             self._execute(b, batch)
 
@@ -181,17 +193,10 @@ class SteinerServer:
         ``n_real`` bounds host-side edge materialization to the lanes that
         carry distinct queries (the rest are inert batch padding).
         """
-        res = steiner_tree_batch(
-            self.g,
-            seed_batch,
-            num_seeds=bucket,
-            mode=self.config.mode,
-            mst_algo=self.config.mst_algo,
-            delta=self.config.delta,
-            max_iters=self.config.max_iters,
-        )
-        totals = np.asarray(res.tree.total_distance)
-        nedges = np.asarray(res.tree.num_edges)
+        out = self._handle.solve(seed_batch)
+        res = out.raw
+        totals = np.asarray(out.total_distance)
+        nedges = np.asarray(out.num_edges)
         edges = None
         if self.config.materialize_edges:
             edges = _edge_sets(
@@ -202,7 +207,9 @@ class SteinerServer:
     def flush(self) -> Dict[int, QueryResult]:
         """Drains every bucket queue; returns {ticket: QueryResult}."""
         out: Dict[int, QueryResult] = {}
-        B = self.config.max_batch
+        # the solver config owns the lane count (ServeConfig.max_batch is
+        # copied into it at construction)
+        B = self._handle.config.batch_size
         for bucket, queue in self._queues.items():
             while queue:
                 # Assemble up to B *distinct uncached* keys; duplicate and

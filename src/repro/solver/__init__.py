@@ -1,0 +1,48 @@
+"""Unified Steiner solver API: one config, one backend registry, reusable
+compiled executables.
+
+The paper's pipeline is ONE algorithm with many execution strategies.
+This package is its single front door::
+
+    from repro.solver import SolverConfig, SteinerSolver
+
+    solver = SteinerSolver(SolverConfig(backend="mesh1d", mesh_shape=(2, 4)))
+    handle = solver.prepare(graph)     # partition + device_put + mesh, once
+    out = handle.solve(seeds)          # cached shard_map executable
+    out.total_distance
+
+Backends (string-keyed registry, :mod:`repro.solver.registry`):
+
+  "single"  one query, one device, jitted (dense / bucket / frontier)
+  "batch"   vmap over a (B, S) query batch against one resident graph
+  "mesh1d"  the paper's dst-block shard_map design
+  "mesh2d"  beyond-paper (src × dst)-block 2D decomposition
+
+The legacy entry points — ``repro.core.steiner_tree``,
+``repro.core.dist_steiner.run_dist_steiner`` /
+``...dist_steiner_2d.run_dist_steiner_2d``, and
+``repro.serve.steiner_tree_batch`` — are thin shims delegating here.
+"""
+
+from repro.solver.api import PreparedGraph, SteinerSolver
+from repro.solver.backends import trace_count
+from repro.solver.config import BACKENDS, MODES, SolverConfig
+from repro.solver.registry import (
+    SolveOutput,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+
+__all__ = [
+    "BACKENDS",
+    "MODES",
+    "PreparedGraph",
+    "SolveOutput",
+    "SolverConfig",
+    "SteinerSolver",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "trace_count",
+]

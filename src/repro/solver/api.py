@@ -1,0 +1,104 @@
+"""The unified solver facade: one config, one prepare, many solves.
+
+Usage::
+
+    from repro.solver import SolverConfig, SteinerSolver
+
+    solver = SteinerSolver(SolverConfig(backend="single", mode="bucket"))
+    handle = solver.prepare(graph)        # preprocessing happens ONCE
+    out = handle.solve(seeds)             # cached jitted executable
+    out.total_distance                    # D(G_S)
+
+``prepare`` computes every preprocessing artifact the chosen backend
+needs — the ELL view for frontier mode, the edge partition + device
+placement + mesh for the distributed backends — exactly once, and returns
+a :class:`PreparedGraph` whose repeated ``solve`` calls dispatch to a
+cached jitted/shard_mapped executable (zero re-traces; asserted in
+``tests/test_solver.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.solver.config import SolverConfig
+from repro.solver.registry import SolveOutput, get_backend
+
+
+class PreparedGraph:
+    """A graph bound to one backend with its preprocessing done.
+
+    Created by :meth:`SteinerSolver.prepare`; do not construct directly.
+    Holds the preprocessing artifacts (ELL view / partition / mesh /
+    device-placed edge arrays) and the per-|S| executable cache.
+    """
+
+    def __init__(self, config: SolverConfig, backend, graph: Graph, artifacts):
+        self.config = config
+        self.graph = graph
+        self._backend = backend
+        self._artifacts = artifacts
+
+    @property
+    def backend(self) -> str:
+        return self._backend.name
+
+    @property
+    def preprocessing(self) -> Tuple[str, ...]:
+        """What :meth:`SteinerSolver.prepare` computed for this backend."""
+        return tuple(self._backend.preprocessing)
+
+    def artifact(self, name: str):
+        """One preprocessing artifact by name (e.g. "ell", "part", "mesh");
+        None when the backend did not compute it."""
+        return self._artifacts.get(name)
+
+    @property
+    def num_executables(self) -> int:
+        """Distinct compiled executables this handle holds (mesh backends;
+        single/batch share process-wide jit caches keyed on static args)."""
+        ex = self._artifacts.get("executables")
+        return len(ex) if ex is not None else 0
+
+    def solve(self, seeds) -> SolveOutput:
+        """Solves one query — (S,) seed ids, or (B, S) for backend="batch".
+
+        The static seed count is taken from the trailing axis; repeated
+        calls with the same shape reuse one compiled executable.
+        """
+        if self._backend.seeds_ndim == 2:
+            seeds = jnp.asarray(seeds, jnp.int32)
+            if seeds.ndim != 2:
+                raise ValueError(
+                    f'backend "batch" expects (B, S) seeds, '
+                    f"got shape {seeds.shape}"
+                )
+            num_seeds = int(seeds.shape[1])
+        else:
+            seeds = np.asarray(seeds, np.int32)
+            if seeds.ndim != 1:
+                raise ValueError(
+                    f"backend {self.backend!r} expects (S,) seeds, "
+                    f"got shape {seeds.shape}"
+                )
+            num_seeds = int(seeds.shape[0])
+        return self._backend.solve(self.config, self._artifacts, seeds, num_seeds)
+
+
+class SteinerSolver:
+    """Facade over the backend registry: validates the config, prepares
+    graphs, and hands out solve handles."""
+
+    def __init__(self, config: SolverConfig = SolverConfig()):
+        self.config = config
+        self._backend = get_backend(config.backend)
+        self._backend.validate(config)
+
+    def prepare(self, graph: Graph) -> PreparedGraph:
+        """Runs the backend's one-time preprocessing for ``graph``."""
+        artifacts = self._backend.prepare(self.config, graph)
+        return PreparedGraph(self.config, self._backend, graph, artifacts)

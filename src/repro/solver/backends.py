@@ -1,0 +1,448 @@
+"""The four built-in execution strategies behind the solver registry.
+
+Each backend wraps one existing pipeline implementation:
+
+  "single"  — :func:`repro.core.steiner.run_pipeline`, jitted per static
+              (shape, mode) on one device; mode="frontier" additionally
+              consumes the ELL adjacency view.
+  "batch"   — the same pipeline vmapped over a leading (B,) query axis
+              (the serving layer's executable, :mod:`repro.serve.batch`).
+  "mesh1d"  — the paper's MPI design on a (replica × vertex-block) device
+              mesh (:mod:`repro.core.dist_steiner`).
+  "mesh2d"  — the beyond-paper (src-block × dst-block) decomposition
+              (:mod:`repro.core.dist_steiner_2d`).
+
+The jitted single/batch executables are module-level, so every consumer —
+the :class:`~repro.solver.api.SteinerSolver` facade, the legacy shims, the
+serve engine, benchmarks — shares ONE compiled artifact per static
+(shape, config) instead of re-tracing per call site.  Each trace bumps a
+counter (:func:`trace_count`) so tests can assert the reuse.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import steiner as smod
+from repro.core import voronoi as vmod
+from repro.core.graph import EllGraph, Graph, ell_view_cached
+from repro.solver.config import BACKEND_MODES, SolverConfig
+from repro.solver.registry import SolveOutput, register_backend
+
+# ----------------------------------------------------------------------------
+# Trace bookkeeping — every jit trace of a solver executable bumps a counter,
+# making "prepare once, solve many, re-trace zero times" a testable claim.
+# ----------------------------------------------------------------------------
+
+_TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _bump(key: str) -> None:
+    _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+
+
+def trace_count(key: Optional[str] = None) -> int:
+    """Traces of solver executables since process start (per backend key
+    when given).  Mesh backends count shard_map executable *builds* — one
+    build is one trace at first call."""
+    if key is not None:
+        return _TRACE_COUNTS.get(key, 0)
+    return sum(_TRACE_COUNTS.values())
+
+
+# ----------------------------------------------------------------------------
+# Module-level jitted executables (single / batch) — shared by all consumers.
+# ----------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_seeds", "mode", "mst_algo", "max_iters")
+)
+def _exec_single_coo(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
+    _bump("single")
+    return smod.run_pipeline(
+        g,
+        seeds,
+        num_seeds=num_seeds,
+        mode=mode,
+        mst_algo=mst_algo,
+        delta=delta,
+        max_iters=max_iters,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_seeds", "mst_algo", "frontier_size", "max_iters"),
+)
+def _exec_single_frontier(
+    g, ell, seeds, *, num_seeds, mst_algo, frontier_size, max_iters
+):
+    _bump("single")
+    st, stats = vmod.voronoi_cells_frontier(
+        ell, seeds, frontier_size=frontier_size, max_rounds=max_iters
+    )
+    return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_seeds", "mode", "mst_algo", "max_iters")
+)
+def _exec_batch(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
+    _bump("batch")
+
+    def one(row):
+        return smod.run_pipeline(
+            g,
+            row,
+            num_seeds=num_seeds,
+            mode=mode,
+            mst_algo=mst_algo,
+            delta=delta,
+            max_iters=max_iters,
+        )
+
+    return jax.vmap(one)(seeds)
+
+
+# ----------------------------------------------------------------------------
+# Backends
+# ----------------------------------------------------------------------------
+
+
+class _Backend:
+    """Shared validation: config/backend cross-checks beyond the dataclass."""
+
+    name = "?"
+    preprocessing: tuple = ()
+    seeds_ndim = 1
+
+    def validate(self, cfg: SolverConfig) -> None:
+        if cfg.backend != self.name:
+            raise ValueError(
+                f"config targets backend {cfg.backend!r}, "
+                f"dispatched to {self.name!r}"
+            )
+        if cfg.mode not in BACKEND_MODES[self.name]:
+            raise ValueError(
+                f"mode {cfg.mode!r} is not supported by backend {self.name!r}"
+            )
+
+
+@register_backend("single")
+class SingleBackend(_Backend):
+    """One query, one device, jitted; all three Voronoi schedules."""
+
+    preprocessing = ("ell_view [mode=frontier]",)
+    seeds_ndim = 1
+
+    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+        art: dict = {"graph": g}
+        if cfg.mode == "frontier":
+            # the O(E) host-Python ELL build happens exactly once per handle
+            art["ell"] = ell_view_cached(g, cfg.ell_width)
+        return art
+
+    def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
+        res = self.solve_raw(
+            cfg, artifacts["graph"], seeds, num_seeds, ell=artifacts.get("ell")
+        )
+        return SolveOutput(
+            total_distance=float(res.tree.total_distance),
+            num_edges=int(res.tree.num_edges),
+            raw=res,
+        )
+
+    def solve_raw(
+        self,
+        cfg: SolverConfig,
+        g: Graph,
+        seeds,
+        num_seeds: int,
+        ell: Optional[EllGraph] = None,
+    ) -> smod.SteinerResult:
+        """Dispatch to the shared jitted executable; returns the native
+        :class:`SteinerResult` (the legacy ``steiner_tree`` contract)."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if cfg.mode == "frontier":
+            if ell is None:
+                ell = ell_view_cached(g, cfg.ell_width)
+            return _exec_single_frontier(
+                g,
+                ell,
+                seeds,
+                num_seeds=num_seeds,
+                mst_algo=cfg.mst_algo,
+                frontier_size=cfg.frontier_size,
+                max_iters=cfg.max_iters,
+            )
+        return _exec_single_coo(
+            g,
+            seeds,
+            num_seeds=num_seeds,
+            mode=cfg.mode,
+            mst_algo=cfg.mst_algo,
+            delta=cfg.delta,
+            max_iters=cfg.max_iters,
+        )
+
+
+@register_backend("batch")
+class BatchBackend(_Backend):
+    """B queries / launch, vmapped against one resident graph."""
+
+    preprocessing = ()
+    seeds_ndim = 2
+
+    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+        return {"graph": g}
+
+    def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
+        res = self.solve_raw(cfg, artifacts["graph"], seeds, num_seeds)
+        return SolveOutput(
+            total_distance=np.asarray(res.tree.total_distance),
+            num_edges=np.asarray(res.tree.num_edges),
+            raw=res,
+        )
+
+    def solve_raw(
+        self, cfg: SolverConfig, g: Graph, seeds, num_seeds: int
+    ) -> smod.SteinerResult:
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if seeds.ndim != 2:
+            raise ValueError(f"seeds must be (B, S), got shape {seeds.shape}")
+        return _exec_batch(
+            g,
+            seeds,
+            num_seeds=num_seeds,
+            mode=cfg.mode,
+            mst_algo=cfg.mst_algo,
+            delta=cfg.delta,
+            max_iters=cfg.max_iters,
+        )
+
+
+def _device_mesh(shape, axes):
+    """mesh_shape → device mesh, with an eager device-count check."""
+    from repro import compat
+
+    need = int(np.prod(shape))
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"mesh_shape {tuple(shape)} needs {need} devices, "
+            f"only {have} available"
+        )
+    return compat.make_mesh(tuple(shape), tuple(axes))
+
+
+def _place_edges(mesh, arrays, axes):
+    """device_put the flat edge arrays sharded as ``P((*axes,))``."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = NamedSharding(mesh, P(tuple(axes)))
+    return tuple(jax.device_put(a, spec) for a in arrays)
+
+
+def _place_replicated(mesh, x):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+@register_backend("mesh1d")
+class Mesh1DBackend(_Backend):
+    """The paper's design: dst-block 1D partition over a device mesh."""
+
+    preprocessing = ("mesh", "partition_1d", "device_put")
+    seeds_ndim = 1
+
+    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+        from repro.core.dist_steiner import partition_edges
+
+        n_replica, n_blocks = cfg.mesh_shape
+        mesh = _device_mesh(cfg.mesh_shape, ("data", "model"))
+        # g is already symmetric + padded; padding edges (0, 0, +inf) stay
+        # inert through the partition (they can never win a relaxation)
+        part = partition_edges(
+            np.asarray(g.src),
+            np.asarray(g.dst),
+            np.asarray(g.w),
+            g.n,
+            n_replica=n_replica,
+            n_blocks=n_blocks,
+            symmetrize=False,
+        )
+        edges = _place_edges(
+            mesh, (part.src, part.dst, part.w), ("data", "model")
+        )
+        return {
+            "graph": g,
+            "mesh": mesh,
+            "part": part,
+            "edges": edges,
+            "executables": {},
+        }
+
+    def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
+        res = self.solve_prepared(
+            cfg,
+            artifacts["mesh"],
+            artifacts["part"],
+            seeds,
+            edges=artifacts["edges"],
+            executables=artifacts["executables"],
+        )
+        return SolveOutput(
+            total_distance=res.total_distance,
+            num_edges=res.num_edges,
+            raw=res,
+        )
+
+    def solve_prepared(
+        self,
+        cfg: SolverConfig,
+        mesh,
+        part,
+        seeds,
+        *,
+        vert_axis: str = "model",
+        replica_axes: Sequence[str] = ("data",),
+        edges=None,
+        executables: Optional[dict] = None,
+    ):
+        """Runs on a prebuilt (mesh, Partition) pair — the legacy
+        ``run_dist_steiner`` path and the prepared-handle path share it.
+        ``executables``/``edges`` come from the handle when present; the
+        legacy path passes neither and pays placement + trace per call."""
+        from repro.core.dist_steiner import (
+            DistSteinerConfig,
+            make_dist_steiner,
+            result_from_device,
+        )
+
+        seeds = np.asarray(seeds, np.int32)
+        replica_axes = tuple(replica_axes)
+        key = (len(seeds), vert_axis, replica_axes)
+        fn = None if executables is None else executables.get(key)
+        if fn is None:
+            dcfg = DistSteinerConfig(
+                n=part.n,
+                nb=part.nb,
+                num_seeds=len(seeds),
+                mode=cfg.mode,
+                mst_algo=cfg.mst_algo,
+                local_steps=cfg.local_steps,
+                pair_chunks=cfg.pair_chunks,
+                max_iters=cfg.max_iters,
+                delta=cfg.delta,
+                fuse_gather=cfg.fuse_gather,
+                lab_i16=cfg.lab_i16,
+            )
+            fn = make_dist_steiner(
+                mesh, dcfg, vert_axis=vert_axis, replica_axes=replica_axes
+            )
+            _bump("mesh1d")
+            if executables is not None:
+                executables[key] = fn
+        if edges is None:
+            edges = _place_edges(
+                mesh, (part.src, part.dst, part.w), (*replica_axes, vert_axis)
+            )
+        out = fn(*edges, _place_replicated(mesh, seeds))
+        return result_from_device(out, part.n)
+
+
+@register_backend("mesh2d")
+class Mesh2DBackend(_Backend):
+    """Beyond-paper (src-block × dst-block) 2D decomposition."""
+
+    preprocessing = ("mesh", "partition_2d", "device_put")
+    seeds_ndim = 1
+
+    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+        from repro.core.dist_steiner_2d import partition_edges_2d
+
+        R, C = cfg.mesh_shape
+        mesh = _device_mesh(cfg.mesh_shape, ("data", "model"))
+        part = partition_edges_2d(
+            np.asarray(g.src),
+            np.asarray(g.dst),
+            np.asarray(g.w),
+            g.n,
+            R=R,
+            C=C,
+            symmetrize=False,
+        )
+        edges = _place_edges(
+            mesh, (part.src_row, part.dst_col, part.w), ("data", "model")
+        )
+        return {
+            "graph": g,
+            "mesh": mesh,
+            "part": part,
+            "edges": edges,
+            "executables": {},
+        }
+
+    def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
+        res = self.solve_prepared(
+            cfg,
+            artifacts["mesh"],
+            artifacts["part"],
+            seeds,
+            edges=artifacts["edges"],
+            executables=artifacts["executables"],
+        )
+        return SolveOutput(
+            total_distance=res.total_distance,
+            num_edges=res.num_edges,
+            raw=res,
+        )
+
+    def solve_prepared(
+        self,
+        cfg: SolverConfig,
+        mesh,
+        part,
+        seeds,
+        *,
+        row_axis: str = "data",
+        col_axis: str = "model",
+        edges=None,
+        executables: Optional[dict] = None,
+    ):
+        from repro.core.dist_steiner import result_from_device
+        from repro.core.dist_steiner_2d import make_dist_steiner_2d
+
+        seeds = np.asarray(seeds, np.int32)
+        key = (len(seeds), row_axis, col_axis)
+        fn = None if executables is None else executables.get(key)
+        if fn is None:
+            fn = make_dist_steiner_2d(
+                mesh,
+                n=part.n,
+                nf=part.nf,
+                num_seeds=len(seeds),
+                mode=cfg.mode,
+                mst_algo=cfg.mst_algo,
+                max_iters=cfg.max_iters,
+                delta=cfg.delta,
+                row_axis=row_axis,
+                col_axis=col_axis,
+            )
+            _bump("mesh2d")
+            if executables is not None:
+                executables[key] = fn
+        if edges is None:
+            edges = _place_edges(
+                mesh, (part.src_row, part.dst_col, part.w), (row_axis, col_axis)
+            )
+        out = fn(*edges, _place_replicated(mesh, seeds))
+        return result_from_device(out, part.n)

@@ -1,0 +1,135 @@
+"""One frozen config for every execution strategy of the one algorithm.
+
+The paper's pipeline is a single algorithm (Voronoi cells → distance graph
+G'1 → MST G'2 → bridge pruning → predecessor walk) with many execution
+strategies.  Historically each strategy grew its own front door with its
+own knob names (``steiner_tree(**kw)``, ``DistSteinerConfig``,
+``ServeConfig``); :class:`SolverConfig` subsumes all of them so that
+strategy is a *parameter* of one solver, mirroring how the related
+literature treats it (Saikia & Karmakar; Sun et al. — see PAPERS.md).
+
+Every field is validated at construction — a bad knob combination fails
+here with a readable error instead of deep inside a trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+BACKENDS: Tuple[str, ...] = ("single", "mesh1d", "mesh2d", "batch")
+MODES: Tuple[str, ...] = ("dense", "bucket", "frontier")
+MST_ALGOS: Tuple[str, ...] = ("prim", "boruvka")
+
+# Which Voronoi schedules each backend can execute.  "frontier" needs the
+# ELL view + top-K compaction, which only the single-device pipeline
+# implements today; the mesh engines run the paper's dense/Δ-bucket
+# schedules over shard_map.
+BACKEND_MODES = {
+    "single": ("dense", "bucket", "frontier"),
+    "batch": ("dense", "bucket"),
+    "mesh1d": ("dense", "bucket"),
+    "mesh2d": ("dense", "bucket"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Static configuration of the unified Steiner solver.
+
+    Attributes:
+      backend: execution strategy — "single" (one device, jitted),
+        "mesh1d" (dst-block shard_map, the paper's MPI design),
+        "mesh2d" (src×dst 2D decomposition), "batch" (vmap over a
+        leading (B,) query axis against one resident graph).
+      mode: Voronoi relaxation schedule — "dense" | "bucket" | "frontier".
+      mst_algo: replicated MST on G'1 — "prim" | "boruvka".
+      delta: Δ-bucket width (mode="bucket"); None → mean edge weight.
+      max_iters: safety cap on relaxation rounds (None → 4n + 64).
+      ell_width: ELL row width when building the frontier view.
+      frontier_size: top-K frontier rows per round (mode="frontier").
+      batch_size: preferred micro-batch lane count B for the "batch"
+        backend (warmup / serving); ``solve`` accepts any leading B.
+      mesh_shape: device mesh shape — (n_replica, n_blocks) for "mesh1d",
+        (R, C) for "mesh2d".  Ignored by "single"/"batch".
+      local_steps: collective-free local relaxations per global exchange
+        (mesh1d only — async-style amortization, paper §IV).
+      pair_chunks: chunked Allreduce(MIN) on the S² pair table (mesh1d
+        only — paper §V-F).
+      fuse_gather: pack (dist, lab) into one f32 all-gather (mesh1d).
+      lab_i16: gather labels as int16 (mesh1d, |S| < 32768).
+    """
+
+    backend: str = "single"
+    mode: str = "bucket"
+    mst_algo: str = "prim"
+    delta: Optional[float] = None
+    max_iters: Optional[int] = None
+    # mode="frontier"
+    ell_width: int = 32
+    frontier_size: int = 1024
+    # backend="batch"
+    batch_size: int = 8
+    # backend="mesh1d"/"mesh2d"
+    mesh_shape: Tuple[int, int] = (1, 1)
+    local_steps: int = 1
+    pair_chunks: int = 1
+    fuse_gather: bool = True
+    lab_i16: bool = False
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend: {self.backend!r} (use one of {BACKENDS})"
+            )
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown mode: {self.mode!r} (use 'dense' | 'bucket' | 'frontier')"
+            )
+        if self.mode not in BACKEND_MODES[self.backend]:
+            raise ValueError(
+                f"mode {self.mode!r} is not supported by backend "
+                f"{self.backend!r} (supported: {BACKEND_MODES[self.backend]})"
+            )
+        if self.mst_algo not in MST_ALGOS:
+            raise ValueError(
+                f"unknown mst_algo: {self.mst_algo!r} (use 'prim' | 'boruvka')"
+            )
+        if self.delta is not None and not self.delta > 0:
+            raise ValueError(f"delta must be positive, got {self.delta}")
+        if self.max_iters is not None and self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        for name in ("ell_width", "frontier_size", "batch_size", "local_steps",
+                     "pair_chunks"):
+            v = getattr(self, name)
+            if not (isinstance(v, int) and v >= 1):
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        ms = self.mesh_shape
+        if (
+            not isinstance(ms, tuple)
+            or len(ms) != 2
+            or not all(isinstance(d, int) and d >= 1 for d in ms)
+        ):
+            raise ValueError(
+                f"mesh_shape must be a (int, int) tuple of positive dims, "
+                f"got {ms!r}"
+            )
+        if self.backend == "mesh2d":
+            # the 2D engine always packs its row gather and has no
+            # local-steps / pair-chunk / i16 variants — reject silently
+            # ignored knobs instead of pretending they took effect
+            for name, default in (
+                ("local_steps", 1),
+                ("pair_chunks", 1),
+                ("fuse_gather", True),
+                ("lab_i16", False),
+            ):
+                if getattr(self, name) != default:
+                    raise ValueError(
+                        f"{name} is a mesh1d-only knob (backend='mesh2d' "
+                        f"got {name}={getattr(self, name)!r})"
+                    )
+
+    def replace(self, **kw) -> "SolverConfig":
+        """Functional update (re-validates)."""
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,67 @@
+"""String-keyed backend registry + the uniform solve result.
+
+A backend is a singleton object wrapping one execution strategy of the
+pipeline.  It declares its preprocessing needs (``preprocessing``), the
+seed rank it consumes (``seeds_ndim``), and three methods:
+
+  validate(cfg)                      — backend-specific config checks
+  prepare(cfg, graph) -> artifacts   — one-time preprocessing (padding,
+                                       ELL view, partition, mesh,
+                                       device placement, executable cache)
+  solve(cfg, artifacts, seeds, S)    — dispatch one query (or batch) to a
+                                       cached jitted / shard_mapped
+                                       executable → :class:`SolveOutput`
+
+Register with ``@register_backend("name")``; look up with
+``get_backend(name)``.  The four built-in strategies live in
+:mod:`repro.solver.backends` and register themselves on import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+_REGISTRY: Dict[str, Any] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOutput:
+    """Backend-independent view of one solve.
+
+    Attributes:
+      total_distance: D(G_S) — float for "single"/"mesh1d"/"mesh2d",
+        (B,) float ndarray for "batch".
+      num_edges: |E_S| — int, or (B,) int ndarray for "batch".
+      raw: the backend-native result for callers that need the full
+        state (``SteinerResult`` for single/batch lanes,
+        ``DistSteinerResult`` for the mesh engines).
+    """
+
+    total_distance: Any
+    num_edges: Any
+    raw: Any
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate + register the backend under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_backend(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -5,11 +5,9 @@ test keeps the machinery honest in CI at ~2 min by compiling the cheapest
 cell (starcoder2 decode) end-to-end in a 512-device subprocess.
 """
 
-import json
 import os
 import subprocess
 import sys
-import tempfile
 
 import pytest
 

@@ -1,0 +1,238 @@
+"""Unified solver API: config validation, backend parity, executable reuse.
+
+The mesh backends run on a (1, 1) mesh here — conftest keeps the main
+process at one host device; multi-device parity is covered by the slow
+subprocess test (tests/test_dist_steiner.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import from_edges, ref, steiner_tree
+from repro.core.graph import ell_view_cached
+from repro.solver import (
+    SolveOutput,
+    SolverConfig,
+    SteinerSolver,
+    available_backends,
+    get_backend,
+    trace_count,
+)
+
+from helpers import random_instance
+
+
+def _instance(trial):
+    src, dst, w, n, seeds, edges = random_instance(trial)
+    return from_edges(src, dst, w, n, pad_to=8), n, seeds, edges
+
+
+# ----------------------------------------------------------------------------
+# config validation
+# ----------------------------------------------------------------------------
+
+
+def test_registry_has_all_four_backends():
+    assert available_backends() == ("batch", "mesh1d", "mesh2d", "single")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown backend"):
+        SolverConfig(backend="mpi")
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("mpi")
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="unknown mode"):
+        SolverConfig(mode="fifo")
+
+
+def test_unknown_mst_algo_rejected():
+    with pytest.raises(ValueError, match="unknown mst_algo"):
+        SolverConfig(mst_algo="kruskal")
+
+
+def test_mode_backend_cross_validation():
+    with pytest.raises(ValueError, match="frontier.*not supported"):
+        SolverConfig(backend="batch", mode="frontier")
+    with pytest.raises(ValueError, match="not supported"):
+        SolverConfig(backend="mesh1d", mode="frontier")
+
+
+def test_scalar_knobs_validated():
+    with pytest.raises(ValueError, match="delta"):
+        SolverConfig(delta=-1.0)
+    with pytest.raises(ValueError, match="batch_size"):
+        SolverConfig(batch_size=0)
+    with pytest.raises(ValueError, match="mesh_shape"):
+        SolverConfig(mesh_shape=(0, 2))
+    with pytest.raises(ValueError, match="mesh_shape"):
+        SolverConfig(mesh_shape=(2, 2, 2))
+
+
+def test_mesh2d_rejects_mesh1d_only_knobs():
+    with pytest.raises(ValueError, match="local_steps"):
+        SolverConfig(backend="mesh2d", local_steps=2)
+    with pytest.raises(ValueError, match="lab_i16"):
+        SolverConfig(backend="mesh2d", lab_i16=True)
+
+
+def test_replace_revalidates():
+    cfg = SolverConfig()
+    assert cfg.replace(mode="dense").mode == "dense"
+    with pytest.raises(ValueError, match="unknown mode"):
+        cfg.replace(mode="fifo")
+
+
+def test_prepare_rejects_oversized_mesh():
+    g, n, seeds, edges = _instance(0)
+    cfg = SolverConfig(backend="mesh1d", mesh_shape=(64, 64))
+    with pytest.raises(ValueError, match="devices"):
+        SteinerSolver(cfg).prepare(g)
+
+
+# ----------------------------------------------------------------------------
+# backend parity — one algorithm, five execution strategies
+# ----------------------------------------------------------------------------
+
+PARITY_SPECS = [
+    ("single", "dense"),
+    ("single", "bucket"),
+    ("single", "frontier"),
+    ("mesh1d", "dense"),
+    ("mesh1d", "bucket"),
+    ("mesh2d", "bucket"),
+]
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_total_distance_identical_across_backends(trial):
+    g, n, seeds, edges = _instance(trial)
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    for backend, mode in PARITY_SPECS:
+        cfg = SolverConfig(backend=backend, mode=mode, mesh_shape=(1, 1))
+        out = SteinerSolver(cfg).prepare(g).solve(seeds)
+        assert isinstance(out, SolveOutput)
+        assert out.total_distance == pytest.approx(d_ref, abs=1e-4), (
+            backend,
+            mode,
+        )
+
+
+def test_batch_backend_matches_single():
+    g, n, seeds, edges = _instance(0)
+    rng = np.random.default_rng(3)
+    batch = np.stack(
+        [rng.choice(n, size=5, replace=False) for _ in range(3)]
+    ).astype(np.int32)
+    cfg = SolverConfig(backend="batch", mode="bucket")
+    out = SteinerSolver(cfg).prepare(g).solve(batch)
+    assert out.total_distance.shape == (3,)
+    for i in range(3):
+        single = steiner_tree(g, jnp.asarray(batch[i]))
+        assert out.total_distance[i] == float(single.tree.total_distance)
+
+
+def test_solve_rejects_wrong_rank():
+    g, n, seeds, edges = _instance(0)
+    h1 = SteinerSolver(SolverConfig(backend="single")).prepare(g)
+    with pytest.raises(ValueError, match=r"\(S,\)"):
+        h1.solve(np.stack([seeds, seeds]))
+    hb = SteinerSolver(SolverConfig(backend="batch")).prepare(g)
+    with pytest.raises(ValueError, match=r"\(B, S\)"):
+        hb.solve(seeds)
+
+
+# ----------------------------------------------------------------------------
+# executable reuse — prepare once, solve many, re-trace zero times
+# ----------------------------------------------------------------------------
+
+
+def test_prepare_traces_once_across_repeated_solves():
+    g, n, seeds, edges = _instance(1)
+    handle = SteinerSolver(SolverConfig(backend="single", mode="bucket")).prepare(g)
+    rng = np.random.default_rng(0)
+    first = handle.solve(seeds)
+    base = trace_count()  # first solve may or may not have traced (shared cache)
+    for _ in range(4):  # same |S|, different seed values
+        s = rng.choice(n, size=len(seeds), replace=False).astype(np.int32)
+        out = handle.solve(s)
+        assert out.total_distance > 0
+    assert trace_count() == base, "repeated solve() must re-trace zero times"
+    assert first.total_distance == handle.solve(seeds).total_distance
+
+
+def test_mesh_handle_caches_executable_per_seed_count():
+    g, n, seeds, edges = _instance(2)
+    handle = SteinerSolver(
+        SolverConfig(backend="mesh1d", mode="bucket", mesh_shape=(1, 1))
+    ).prepare(g)
+    assert handle.num_executables == 0
+    handle.solve(seeds)
+    assert handle.num_executables == 1
+    base = trace_count("mesh1d")
+    handle.solve(np.roll(seeds, 1))  # same |S| → cached executable
+    assert trace_count("mesh1d") == base
+    handle.solve(seeds[:3])  # new |S| → one new executable
+    assert handle.num_executables == 2
+
+
+def test_frontier_handle_caches_ell_view():
+    g, n, seeds, edges = _instance(0)
+    solver = SteinerSolver(SolverConfig(backend="single", mode="frontier"))
+    h1 = solver.prepare(g)
+    h2 = solver.prepare(g)
+    assert h1.artifact("ell") is not None
+    # the memo makes repeated prepare() of the same resident graph free
+    assert h1.artifact("ell") is h2.artifact("ell")
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    assert h1.solve(seeds).total_distance == pytest.approx(d_ref, abs=1e-4)
+
+
+def test_shim_path_memoizes_ell(monkeypatch):
+    """Repeated mode="frontier" calls through the legacy steiner_tree
+    front door must not pay the O(E) host-Python ELL rebuild."""
+    import repro.core.graph as graphmod
+
+    g, n, seeds, edges = _instance(1)
+    calls = {"n": 0}
+    real = graphmod.to_ell
+
+    def counting(gg, k, **kw):
+        calls["n"] += 1
+        return real(gg, k, **kw)
+
+    monkeypatch.setattr(graphmod, "to_ell", counting)
+    r1 = steiner_tree(g, jnp.asarray(seeds), mode="frontier")
+    r2 = steiner_tree(g, jnp.asarray(seeds), mode="frontier")
+    assert calls["n"] <= 1  # 0 if another test already memoized this g
+    assert float(r1.tree.total_distance) == float(r2.tree.total_distance)
+
+
+def test_ell_view_cached_identity_and_rebuild():
+    g, n, seeds, edges = _instance(2)
+    a = ell_view_cached(g, 8)
+    b = ell_view_cached(g, 8)
+    assert a is b
+    c = ell_view_cached(g, 16)  # different width → different view
+    assert c is not a
+
+
+# ----------------------------------------------------------------------------
+# preset plumbing (configs.steiner → dryrun)
+# ----------------------------------------------------------------------------
+
+
+def test_paper_workload_presets_are_solver_configs():
+    from repro.configs.steiner import SOLVER_PRESETS, solver_preset
+
+    assert set(SOLVER_PRESETS) == {"lvj_1k", "ukw_1k", "clw_10k"}
+    for name in SOLVER_PRESETS:
+        p = solver_preset(name)
+        assert isinstance(p, SolverConfig)
+        assert p.backend == "mesh1d"
+    assert solver_preset("clw_10k").pair_chunks > 1  # §V-F chunked Allreduce
+    with pytest.raises(KeyError, match="no solver preset"):
+        solver_preset("nope")
