@@ -1,0 +1,114 @@
+"""Perf driver for graphstore streaming ingestion.
+
+Builds RMAT ``.gstore`` stores across a ladder of scales and records the
+throughput trajectory (edges/sec), the measured bounded-memory transient
+(``IngestStats.peak_chunk_bytes``), and process peak RSS.  Writes
+``BENCH_ingest.json`` at the repo root (same family as
+``BENCH_steiner.json`` / ``BENCH_serve.json``).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_ingest [--scales 12,14,16,18]
+      [--edge-factor 8] [--chunk-edges 65536] [--keep DIR]
+
+``--keep DIR`` leaves the largest store on disk (so a follow-up
+``perf_steiner --store`` run can benchmark solves off it); by default
+stores are built in a temp dir and deleted.
+"""
+
+import argparse
+import json
+import platform
+import resource
+import shutil
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_ingest.json"
+
+
+def peak_rss_mb() -> float:
+    # ru_maxrss is KiB on Linux, bytes on macOS
+    v = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return v / 1024 if platform.system() != "Darwin" else v / 2**20
+
+
+def run(args) -> None:
+    from repro.graphstore import RmatEdgeSource, build_store, open_store
+
+    scales = [int(s) for s in args.scales.split(",")]
+    keep = Path(args.keep) if args.keep else None
+    tmp = Path(tempfile.mkdtemp(prefix="perf_ingest_"))
+    rows = []
+    try:
+        for scale in scales:
+            dest = (keep if keep and scale == max(scales) else tmp)
+            dest.mkdir(parents=True, exist_ok=True)
+            path, stats = build_store(
+                RmatEdgeSource(
+                    scale,
+                    args.edge_factor,
+                    seed=args.seed,
+                    chunk_edges=args.chunk_edges,
+                ),
+                dest / f"rmat_s{scale}_ef{args.edge_factor}.gstore",
+            )
+            store = open_store(path, verify=False)
+            disk_mb = sum(
+                (store.path / e["file"]).stat().st_size
+                for e in store.manifest["arrays"].values()
+            ) / 2**20
+            row = {
+                "scale": scale,
+                "n_vertices": stats.n,
+                "edges_in": stats.edges_in,
+                "m_directed": stats.m_directed,
+                "seconds": round(stats.seconds, 3),
+                "edges_per_sec": round(stats.edges_per_sec, 1),
+                "peak_chunk_mb": round(stats.peak_chunk_bytes / 2**20, 2),
+                "fixed_mb": round(stats.fixed_bytes / 2**20, 2),
+                "store_mb": round(disk_mb, 1),
+                "peak_rss_mb": round(peak_rss_mb(), 1),
+            }
+            rows.append(row)
+            print(
+                f"scale={scale:2d} n={row['n_vertices']:>9,} "
+                f"m={row['m_directed']:>11,} {row['seconds']:6.2f}s "
+                f"{row['edges_per_sec']:>12,.0f} e/s "
+                f"chunk={row['peak_chunk_mb']:6.2f}MB "
+                f"store={row['store_mb']:7.1f}MB rss={row['peak_rss_mb']:.0f}MB",
+                flush=True,
+            )
+            if dest is tmp:
+                shutil.rmtree(path, ignore_errors=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    record = {
+        "bench": "ingest",
+        "workload": {
+            "generator": "rmat",
+            "edge_factor": args.edge_factor,
+            "chunk_edges": args.chunk_edges,
+            "seed": args.seed,
+        },
+        "env": {"platform": platform.platform()},
+        "scales": rows,
+    }
+    OUT.write_text(json.dumps(record, indent=1))
+    print(f"wrote {OUT}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scales", default="12,14,16,18")
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--chunk-edges", type=int, default=1 << 16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--keep", default=None,
+                    help="keep the largest store in this directory")
+    run(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

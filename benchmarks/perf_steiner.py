@@ -28,6 +28,7 @@ Two benches:
 
 Usage:
   PYTHONPATH=src python -m benchmarks.perf_steiner [--scale 10] [--queries 12]
+  PYTHONPATH=src python -m benchmarks.perf_steiner --store g14.gstore
   PYTHONPATH=src python -m benchmarks.perf_steiner --bench roofline [--cell ukw_1k]
 """
 
@@ -59,20 +60,33 @@ def run_handle_bench(args) -> None:
 
     rng_seed = args.seed
     t0 = time.perf_counter()
-    src, dst, w, n = rmat_edges(
-        args.scale, args.edge_factor, max_weight=100, seed=rng_seed
-    )
-    g = from_edges(src, dst, w, n, pad_to=8)
+    if args.store:
+        # benchmark solves straight off a memmapped .gstore (built with
+        # `python -m repro.graphstore build`): prepare() materializes /
+        # ELL-builds from disk, so t_prepare includes the load
+        from repro.graphstore import open_store
+
+        g = open_store(args.store, verify=False)
+        n, m = g.n, g.m
+        graph_desc = f"gstore:{args.store}"
+    else:
+        src, dst, w, n = rmat_edges(
+            args.scale, args.edge_factor, max_weight=100, seed=rng_seed
+        )
+        g = from_edges(src, dst, w, n, pad_to=8)
+        m = int(g.num_edges)
+        graph_desc = f"rmat_scale{args.scale}_ef{args.edge_factor}"
     t_build = time.perf_counter() - t0
     print(
-        f"graph: RMAT scale={args.scale} n={n} "
-        f"directed_edges={int(g.num_edges)} build={t_build:.2f}s",
+        f"graph: {graph_desc} n={n} directed_edges={m} build={t_build:.2f}s",
         flush=True,
     )
 
-    # one fixed |S| per run: every mode sees identical queries
+    # one fixed |S| per run: every mode sees identical queries (uniform —
+    # the only strategy that needs no edge arrays on the --store path)
+    empty = np.zeros(0, np.int32)
     seed_sets = [
-        select_seeds(n, src, dst, args.num_seeds, strategy="uniform",
+        select_seeds(n, empty, empty, args.num_seeds, strategy="uniform",
                      seed=1000 + q)
         for q in range(args.queries)
     ]
@@ -121,9 +135,9 @@ def run_handle_bench(args) -> None:
     record = {
         "bench": "steiner",
         "workload": {
-            "graph": f"rmat_scale{args.scale}_ef{args.edge_factor}",
+            "graph": graph_desc,
             "n_vertices": int(n),
-            "n_directed_edges": int(g.num_edges),
+            "n_directed_edges": int(m),
             "num_seeds": args.num_seeds,
             "queries": args.queries,
             "backend": "single",
@@ -240,6 +254,9 @@ def main() -> None:
     # handle bench
     ap.add_argument("--scale", type=int, default=10, help="RMAT n = 2^scale")
     ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="benchmark solves off a memmapped .gstore instead "
+                         "of building the RMAT graph in RAM")
     ap.add_argument("--num-seeds", type=int, default=16)
     ap.add_argument("--queries", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)

@@ -12,6 +12,8 @@ core/         the paper's contribution: Voronoi-cell based 2-approx Steiner
 solver/       unified solver API: one config, backend registry, reusable
               compiled executables (the single front door)
 serve/        batched query serving: shape buckets, micro-batching, LRU cache
+graphstore/   out-of-core .gstore graph storage: streaming ingest, shards,
+              memmapped loading (graphs larger than host RAM)
 kernels/      Pallas TPU kernels for the relaxation hot loop
 models/       assigned architecture zoo (LM / GNN / RecSys)
 configs/      one config per assigned architecture (+ the paper's own)

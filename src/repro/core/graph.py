@@ -13,6 +13,12 @@ Conventions
 * padding edges are self-loops ``(0, 0, +inf)`` — they can never win a
   min-plus relaxation and contribute ``+inf`` only to masked lanes
 * weights are ``float32`` in ``[1, inf)`` per the paper's distance function
+
+Graphs larger than host RAM live on disk as ``.gstore`` directories
+(:mod:`repro.graphstore`); ``GraphStore.to_graph()`` materializes this
+container from the memmapped CSR, and ``GraphStore.ell(k)`` builds the
+:class:`EllGraph` view chunkwise without the O(E)-Python :func:`to_ell`
+loop below (their outputs are asserted equal in tests/test_graphstore.py).
 """
 
 from __future__ import annotations

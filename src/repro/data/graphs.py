@@ -26,36 +26,32 @@ def rmat_edges(
     seed: int = 0,
     connect: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-    """RMAT (Graph500-style) scale-free weighted graph.
+    """RMAT (Graph500-style) scale-free weighted graph, fully materialized.
 
     Returns (src, dst, w, n) with n = 2**scale, ~edge_factor * n undirected
     edges, integer weights uniform in [1, max_weight] (paper Table III).
     ``connect=True`` threads a random Hamiltonian-ish path through all
     vertices so the graph has a single connected component (keeps seed
     selection simple in tests; real graphs use the largest component).
+
+    This is the in-RAM convenience wrapper over the chunked generator
+    (:class:`repro.graphstore.RmatEdgeSource`) — the concatenation of its
+    chunks, so a graph built here and one streamed to disk with
+    ``build_store(RmatEdgeSource(scale, edge_factor, seed=seed))`` are the
+    same graph.  For scales that do not fit in RAM, use the source +
+    :func:`repro.graphstore.build_store` directly.
     """
-    rng = np.random.default_rng(seed)
-    n = 1 << scale
-    m = edge_factor * n
-    src = np.zeros(m, np.int64)
-    dst = np.zeros(m, np.int64)
-    for lvl in range(scale):
-        r = rng.random(m)
-        go_right_src = (r >= a + b) & (r < a + b + c) | (r >= a + b + c)
-        go_right_dst = ((r >= a) & (r < a + b)) | (r >= a + b + c)
-        src += go_right_src.astype(np.int64) << lvl
-        dst += go_right_dst.astype(np.int64) << lvl
-    # permute vertex ids to break RMAT's id-degree correlation
-    perm = rng.permutation(n)
-    src, dst = perm[src], perm[dst]
-    keep = src != dst
-    src, dst = src[keep], dst[keep]
-    if connect:
-        path = rng.permutation(n)
-        src = np.concatenate([src, path[:-1]])
-        dst = np.concatenate([dst, path[1:]])
-    w = rng.integers(1, max_weight + 1, size=src.shape[0]).astype(np.float32)
-    return src.astype(np.int32), dst.astype(np.int32), w, n
+    from repro.graphstore.ingest import RmatEdgeSource
+
+    source = RmatEdgeSource(
+        scale, edge_factor, a=a, b=b, c=c, max_weight=max_weight,
+        seed=seed, connect=connect,
+    )
+    chunks = list(source)
+    src = np.concatenate([ch[0] for ch in chunks])
+    dst = np.concatenate([ch[1] for ch in chunks])
+    w = np.concatenate([ch[2] for ch in chunks])
+    return src, dst, w, source.n
 
 
 def er_edges(
@@ -174,15 +170,19 @@ def select_seeds(
 
 
 def build_csr(n: int, src: np.ndarray, dst: np.ndarray):
-    """Returns (indptr, indices) of the symmetrized adjacency."""
-    s = np.r_[src, dst]
-    d = np.r_[dst, src]
-    order = np.argsort(s, kind="stable")
-    s, d = s[order], d[order]
-    indptr = np.zeros(n + 1, np.int64)
-    np.add.at(indptr, s + 1, 1)
-    indptr = np.cumsum(indptr)
-    return indptr, d.astype(np.int32)
+    """Returns (indptr, indices) of the symmetrized adjacency.
+
+    Delegates to the one CSR builder in the repo
+    (:func:`repro.graphstore.csr_from_chunks`) with the whole edge list as
+    a single chunk, so within-row neighbor order matches the historical
+    stable-sort behavior (all forward edges in input order, then all
+    reverse edges).
+    """
+    from repro.graphstore.ingest import ArraySource, csr_from_chunks
+
+    source = ArraySource(src, dst, None, n, chunk_edges=max(1, len(src)))
+    indptr, indices, _ = csr_from_chunks(n, source, symmetrize=True)
+    return indptr, indices
 
 
 def sample_neighbors(

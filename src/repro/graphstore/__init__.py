@@ -1,0 +1,62 @@
+"""Out-of-core partitioned graph storage & streaming ingestion.
+
+The substrate for graphs larger than comfortable RAM (the paper runs up
+to 128B edges): a versioned on-disk CSR layout (``*.gstore/``), bounded-
+memory two-pass ingestion from chunked edge sources, per-device shard
+partitioning aligned with the mesh backends, and lazy memmapped loading
+wired into :class:`repro.solver.SteinerSolver`.
+
+* :mod:`repro.graphstore.format`    — the ``.gstore`` layout, manifest,
+  checksums, version gate
+* :mod:`repro.graphstore.ingest`    — streaming CSR builder + edge
+  sources (chunked RMAT, SNAP/TSV, in-memory arrays)
+* :mod:`repro.graphstore.partition` — 1D / 2D shard writers, hub-sort
+  vertex reorder
+* :mod:`repro.graphstore.loader`    — ``open_store`` → :class:`GraphStore`
+  (lazy ``to_graph``, chunked ELL, per-shard partition loads)
+
+CLI: ``python -m repro.graphstore {build,info,partition}``.
+"""
+
+from repro.graphstore.format import (
+    FORMAT_VERSION,
+    ChecksumError,
+    StoreFormatError,
+    StoreWriter,
+)
+from repro.graphstore.ingest import (
+    ArraySource,
+    IngestStats,
+    RmatEdgeSource,
+    TsvEdgeSource,
+    build_store,
+    csr_from_chunks,
+)
+from repro.graphstore.loader import GraphStore, open_store
+from repro.graphstore.partition import (
+    hub_sort_store,
+    load_partition,
+    load_partition_2d,
+    partition_store,
+    partition_store_2d,
+)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "ChecksumError",
+    "StoreFormatError",
+    "StoreWriter",
+    "ArraySource",
+    "IngestStats",
+    "RmatEdgeSource",
+    "TsvEdgeSource",
+    "build_store",
+    "csr_from_chunks",
+    "GraphStore",
+    "open_store",
+    "hub_sort_store",
+    "load_partition",
+    "load_partition_2d",
+    "partition_store",
+    "partition_store_2d",
+]

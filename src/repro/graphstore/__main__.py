@@ -1,0 +1,159 @@
+"""``python -m repro.graphstore`` — build / inspect / partition stores.
+
+Examples::
+
+    # 2^14 vertices, ~8·2^14 undirected edges, streamed to disk
+    python -m repro.graphstore build g14.gstore --source rmat --scale 14 \\
+        --edge-factor 8 --seed 0
+
+    # SNAP-style edge list (u v [w] per line, '#' comments)
+    python -m repro.graphstore build web.gstore --source tsv --input web.txt
+
+    python -m repro.graphstore info g14.gstore
+
+    # shards for a (1 replica × 4 vertex-block) mesh
+    python -m repro.graphstore partition g14.gstore --scheme 1d \\
+        --replicas 1 --blocks 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def _cmd_build(args) -> int:
+    from repro.graphstore import (
+        RmatEdgeSource,
+        TsvEdgeSource,
+        build_store,
+        hub_sort_store,
+        open_store,
+    )
+
+    if args.source == "rmat":
+        src = RmatEdgeSource(
+            args.scale,
+            args.edge_factor,
+            max_weight=args.max_weight,
+            seed=args.seed,
+            chunk_edges=args.chunk_edges,
+        )
+    else:
+        if not args.input:
+            print("--source tsv requires --input PATH", file=sys.stderr)
+            return 2
+        src = TsvEdgeSource(args.input, n=args.n, chunk_edges=args.chunk_edges)
+    path, stats = build_store(src, args.store)
+    print(
+        f"built {path}: n={stats.n} m={stats.m_directed} "
+        f"({stats.edges_in} input edges, {stats.chunks} chunks, "
+        f"{stats.seconds:.2f}s, {stats.edges_per_sec:,.0f} edges/s, "
+        f"peak chunk {stats.peak_chunk_bytes / 2**20:.1f} MiB)"
+    )
+    if args.hub_sort:
+        store = open_store(path, verify=False)
+        out = str(path).replace(".gstore", "") + ".hub.gstore"
+        hpath, _ = hub_sort_store(store, out)
+        print(f"hub-sorted copy: {hpath}")
+    return 0
+
+
+def _cmd_info(args) -> int:
+    from repro.graphstore import open_store
+
+    store = open_store(args.store, verify=args.verify)
+    mf = store.manifest
+    deg = store.degrees()
+    print(f"{store.path}")
+    print(f"  format_version : {mf['format_version']}")
+    print(f"  n              : {store.n:,}")
+    print(f"  m (directed)   : {store.m:,}")
+    print(f"  weight range   : {mf.get('weight_range')}")
+    print(f"  degree min/med/max : {deg.min()} / {int(np.median(deg))} / {deg.max()}")
+    print(f"  source         : {mf.get('source')}")
+    print(f"  reorder        : {mf.get('reorder', None)}")
+    part = store.partition_meta
+    if part:
+        counts = np.asarray(part["counts"])
+        print(
+            f"  partition      : {part['scheme']} "
+            f"{json.dumps({k: v for k, v in part.items() if k != 'counts'})}"
+        )
+        print(
+            f"  shard edges    : min={counts.min():,} max={counts.max():,} "
+            f"(balance {counts.max() / max(1, counts.min()):.2f}x)"
+        )
+    else:
+        print("  partition      : none")
+    print(f"  checksums      : {'verified' if args.verify else 'skipped'}")
+    return 0
+
+
+def _cmd_partition(args) -> int:
+    from repro.graphstore import open_store, partition_store, partition_store_2d
+
+    store = open_store(args.store, verify=False)
+    if args.scheme == "1d":
+        meta = partition_store(
+            store, n_replica=args.replicas, n_blocks=args.blocks
+        )
+    else:
+        meta = partition_store_2d(store, R=args.rows, C=args.cols)
+    counts = np.asarray(meta["counts"])
+    print(
+        f"partitioned {store.path} [{meta['scheme']}]: "
+        f"{counts.size} shards, edges/shard min={counts.min():,} "
+        f"max={counts.max():,}"
+    )
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.graphstore",
+        description="Out-of-core .gstore graph storage utilities.",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="stream an edge source into a .gstore")
+    b.add_argument("store", help="output .gstore directory")
+    b.add_argument("--source", choices=("rmat", "tsv"), default="rmat")
+    b.add_argument("--scale", type=int, default=14, help="RMAT n = 2^scale")
+    b.add_argument("--edge-factor", type=int, default=8)
+    b.add_argument("--max-weight", type=int, default=100)
+    b.add_argument("--seed", type=int, default=0)
+    b.add_argument("--input", help="edge-list file for --source tsv")
+    b.add_argument("--n", type=int, default=None, help="vertex count (tsv)")
+    b.add_argument("--chunk-edges", type=int, default=1 << 16)
+    b.add_argument(
+        "--hub-sort", action="store_true",
+        help="also write a degree-descending-reordered copy (*.hub.gstore)",
+    )
+    b.set_defaults(fn=_cmd_build)
+
+    i = sub.add_parser("info", help="print a store's manifest summary")
+    i.add_argument("store")
+    i.add_argument("--no-verify", dest="verify", action="store_false",
+                   help="skip checksum verification")
+    i.set_defaults(fn=_cmd_info, verify=True)
+
+    p = sub.add_parser("partition", help="write per-device shards")
+    p.add_argument("store")
+    p.add_argument("--scheme", choices=("1d", "2d"), default="1d")
+    p.add_argument("--replicas", type=int, default=1, help="1d: replica rows")
+    p.add_argument("--blocks", type=int, default=4, help="1d: vertex blocks")
+    p.add_argument("--rows", type=int, default=2, help="2d: src-block rows")
+    p.add_argument("--cols", type=int, default=2, help="2d: dst-block cols")
+    p.set_defaults(fn=_cmd_partition)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,347 @@
+"""Partitioning a stored graph into per-shard files + hub-sort reorder.
+
+Two schemes, each matching its mesh backend bit-for-bit:
+
+* **1D vertex-block** (paper §IV, ``core.dist_steiner.partition_edges``):
+  every directed edge goes to the column owning its destination block
+  (``dst // nb``), dealt round-robin across replicas within the block.
+* **2D edge-grid** (``core.dist_steiner_2d.partition_edges_2d``): device
+  ``(r, c)`` owns edges whose source falls in row-block r and whose
+  destination's fine block is congruent to c.
+
+Shards are written *streamingly* from the store's CSR edge order —
+assignment uses running per-block counters, so the shard contents equal
+what the in-memory partitioners produce on the same edge sequence, and
+``load_partition``/``load_partition_2d`` rebuild the exact padded
+``Partition``/``Partition2D`` the shard_map executables consume.  Shard
+files hold *global* vertex ids; localization to block-relative
+coordinates happens at load, keeping the on-disk shards scheme-agnostic.
+
+Hub-sort (:func:`hub_sort_store`) writes a new store whose vertex ids
+are ranked by descending degree — the analogue of HavoqGT's hub
+delegation, concentrating high-degree rows in the leading blocks — with
+the old→new permutation persisted as ``vertex_perm`` so callers can
+translate query seeds (``GraphStore.map_ids``).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Tuple
+
+import numpy as np
+
+from repro.graphstore import format as fmt
+from repro.graphstore.format import StoreFormatError, StoreWriter
+from repro.graphstore.loader import GraphStore
+
+DEFAULT_CHUNK_EDGES = 1 << 20
+
+_SHARD_FIELDS = (("src", np.int32), ("dst", np.int32), ("w", np.float32))
+
+
+def _shard_stem(scheme: str, r: int, b: int) -> str:
+    return f"{scheme}_r{r}_b{b}"
+
+
+def _clean_shards(shdir: Path, scheme: str) -> None:
+    """Removes a scheme's shard files (re-partitioning appends from zero)."""
+    for f in shdir.glob(f"{scheme}_r*_b*_*.bin"):
+        f.unlink()
+
+
+def _append_shard(shdir: Path, stem: str,
+                  s: np.ndarray, d: np.ndarray, w: np.ndarray) -> None:
+    # open-append-close per call: the fd footprint stays O(1) regardless
+    # of shard count (3 * replicas * blocks files would blow the ulimit)
+    for (field, dtype), arr in zip(_SHARD_FIELDS, (s, d, w)):
+        with open(shdir / f"{stem}_{field}.bin", "ab") as h:
+            h.write(np.ascontiguousarray(arr, dtype=dtype).tobytes())
+
+
+def _register_shards(
+    store: GraphStore, scheme: str, counts: np.ndarray, part_meta: dict
+) -> None:
+    """Adds shard arrays + the partition block to the store manifest.
+
+    Entries from a previous partition of the same scheme are dropped
+    first — their files were removed by ``_clean_shards``, and stale
+    manifest rows would make every later ``open_store`` fail checksum
+    verification on files that no longer exist.
+    """
+    manifest = store.manifest
+    prefix = f"shard_{scheme}_"
+    for name in [k for k in manifest["arrays"] if k.startswith(prefix)]:
+        del manifest["arrays"][name]
+    for (r, b), c in np.ndenumerate(counts):
+        if c == 0:
+            continue
+        stem = _shard_stem(scheme, r, b)
+        for field, dtype in _SHARD_FIELDS:
+            rel = f"shards/{stem}_{field}.bin"
+            manifest["arrays"][f"shard_{stem}_{field}"] = {
+                "file": rel,
+                "dtype": np.dtype(dtype).newbyteorder("<").str,
+                "shape": [int(c)],
+                "crc32": fmt.crc32_file(store.path / rel),
+            }
+    manifest["partition"] = part_meta
+    tmp = store.path / (fmt.MANIFEST_NAME + ".tmp")
+    tmp.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    tmp.replace(store.path / fmt.MANIFEST_NAME)
+
+
+def _rank_within_key(key: np.ndarray, running: np.ndarray) -> np.ndarray:
+    """Per-edge sequence number within its key, continuing ``running``.
+
+    Updates ``running`` in place with this chunk's key counts.
+    """
+    o = np.argsort(key, kind="stable")
+    ks = key[o]
+    run_start = np.r_[0, np.flatnonzero(ks[1:] != ks[:-1]) + 1]
+    run_len = np.diff(np.r_[run_start, ks.shape[0]])
+    within = np.arange(ks.shape[0]) - np.repeat(run_start, run_len)
+    seq = np.empty(key.shape[0], np.int64)
+    seq[o] = running[ks] + within
+    running += np.bincount(key, minlength=running.shape[0])
+    return seq
+
+
+# ----------------------------------------------------------------------------
+# 1D vertex-block partition (paper §IV)
+# ----------------------------------------------------------------------------
+
+
+def partition_store(
+    store: GraphStore,
+    *,
+    n_replica: int,
+    n_blocks: int,
+    block_multiple: int = 8,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+) -> dict:
+    """Writes 1D dst-block shards into ``<store>/shards/`` and records the
+    scheme in the manifest.  Streaming: one edge chunk in flight."""
+    nb = -(-store.n // n_blocks)
+    nb = -(-nb // block_multiple) * block_multiple
+    shdir = store.path / "shards"
+    shdir.mkdir(exist_ok=True)
+    _clean_shards(shdir, "1d")  # appends must start from empty files
+    counts = np.zeros((n_replica, n_blocks), np.int64)
+    running = np.zeros(n_blocks, np.int64)
+    for s, d, w in store.iter_coo(chunk_edges):
+        blk = d.astype(np.int64) // nb
+        rep = _rank_within_key(blk, running) % n_replica
+        for r in range(n_replica):
+            mr = rep == r
+            if not mr.any():
+                continue
+            blk_r, s_r, d_r, w_r = blk[mr], s[mr], d[mr], w[mr]
+            for b in np.unique(blk_r):
+                mb = blk_r == b
+                _append_shard(
+                    shdir, _shard_stem("1d", r, int(b)),
+                    s_r[mb], d_r[mb], w_r[mb],
+                )
+                counts[r, int(b)] += int(mb.sum())
+    meta = {
+        "scheme": "1d",
+        "n_replica": int(n_replica),
+        "n_blocks": int(n_blocks),
+        "nb": int(nb),
+        "block_multiple": int(block_multiple),
+        "counts": counts.tolist(),
+    }
+    _register_shards(store, "1d", counts, meta)
+    return meta
+
+
+def load_partition(store: GraphStore):
+    """Per-shard loads → the exact padded 1D ``Partition`` layout."""
+    from repro.core.dist_steiner import Partition
+
+    meta = store.partition_meta
+    if not meta or meta.get("scheme") != "1d":
+        raise StoreFormatError(
+            f"{store.path}: no 1D partition in manifest "
+            f"(found {meta and meta.get('scheme')!r}) — run "
+            f"`python -m repro.graphstore partition` first"
+        )
+    R, B, nb = meta["n_replica"], meta["n_blocks"], meta["nb"]
+    bm = meta["block_multiple"]
+    counts = np.asarray(meta["counts"], np.int64)
+    eb = max(1, int(counts.max()))
+    eb = -(-eb // bm) * bm
+    osrc = np.zeros((R, B, eb), np.int32)
+    odst = np.zeros((R, B, eb), np.int32)
+    ow = np.full((R, B, eb), np.inf, np.float32)
+    for b in range(B):
+        odst[:, b, :] = b * nb  # padding dst = block base (local id 0)
+    for (r, b), c in np.ndenumerate(counts):
+        if c == 0:
+            continue
+        stem = _shard_stem("1d", r, b)
+        osrc[r, b, :c] = store.array(f"shard_{stem}_src")
+        odst[r, b, :c] = store.array(f"shard_{stem}_dst")
+        ow[r, b, :c] = store.array(f"shard_{stem}_w")
+    return Partition(
+        src=osrc.reshape(-1),
+        dst=odst.reshape(-1),
+        w=ow.reshape(-1),
+        n=store.n,
+        nb=nb,
+        eb=eb,
+        n_blocks=B,
+        n_replica=R,
+    )
+
+
+# ----------------------------------------------------------------------------
+# 2D edge-grid partition
+# ----------------------------------------------------------------------------
+
+
+def partition_store_2d(
+    store: GraphStore,
+    *,
+    R: int,
+    C: int,
+    block_multiple: int = 8,
+    chunk_edges: int = DEFAULT_CHUNK_EDGES,
+) -> dict:
+    """Writes 2D (src-row × dst-col) shards; one shard per device (r, c)."""
+    nf = -(-store.n // (R * C))
+    nf = -(-nf // block_multiple) * block_multiple
+    shdir = store.path / "shards"
+    shdir.mkdir(exist_ok=True)
+    _clean_shards(shdir, "2d")  # appends must start from empty files
+    counts = np.zeros((R * C,), np.int64)
+    for s, d, w in store.iter_coo(chunk_edges):
+        s64 = s.astype(np.int64)
+        d64 = d.astype(np.int64)
+        r = np.minimum((s64 // nf) // C, R - 1)
+        c = (d64 // nf) % C
+        dev = r * C + c
+        for dv in np.unique(dev):
+            md = dev == dv
+            _append_shard(
+                shdir, _shard_stem("2d", int(dv), 0),
+                s[md], d[md], w[md],
+            )
+            counts[int(dv)] += int(md.sum())
+    meta = {
+        "scheme": "2d",
+        "R": int(R),
+        "C": int(C),
+        "nf": int(nf),
+        "block_multiple": int(block_multiple),
+        "counts": counts.tolist(),
+    }
+    _register_shards(store, "2d", counts.reshape(-1, 1), meta)
+    return meta
+
+
+def load_partition_2d(store: GraphStore):
+    """Per-shard loads → the exact padded ``Partition2D`` layout, with
+    global ids localized to (row, column) coordinates."""
+    from repro.core.dist_steiner_2d import Partition2D
+
+    meta = store.partition_meta
+    if not meta or meta.get("scheme") != "2d":
+        raise StoreFormatError(
+            f"{store.path}: no 2D partition in manifest "
+            f"(found {meta and meta.get('scheme')!r})"
+        )
+    R, C, nf = meta["R"], meta["C"], meta["nf"]
+    bm = meta["block_multiple"]
+    counts = np.asarray(meta["counts"], np.int64)
+    eb = -(-int(counts.max()) // bm) * bm
+    osrc = np.zeros((R * C, eb), np.int32)
+    odst = np.zeros((R * C, eb), np.int32)
+    ow = np.full((R * C, eb), np.inf, np.float32)
+    for dv in range(R * C):
+        c = int(counts[dv])
+        if c == 0:
+            continue
+        stem = _shard_stem("2d", dv, 0)
+        s = np.asarray(store.array(f"shard_{stem}_src"), np.int64)
+        d = np.asarray(store.array(f"shard_{stem}_dst"), np.int64)
+        rr = dv // C
+        osrc[dv, :c] = s - rr * C * nf
+        fi = d // nf
+        odst[dv, :c] = (fi // C) * nf + (d % nf)
+        ow[dv, :c] = store.array(f"shard_{stem}_w")
+    return Partition2D(
+        src_row=osrc.reshape(-1),
+        dst_col=odst.reshape(-1),
+        w=ow.reshape(-1),
+        n=store.n,
+        nf=nf,
+        R=R,
+        C=C,
+        eb=eb,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Hub-sort (degree-descending) reorder
+# ----------------------------------------------------------------------------
+
+
+def hub_sort_store(
+    store: GraphStore,
+    out_path,
+    *,
+    chunk_vertices: int = 1 << 16,
+) -> Tuple[Path, np.ndarray]:
+    """Writes a degree-descending-reordered copy of ``store``.
+
+    Returns ``(path, perm)`` with ``perm[old_id] = new_id``.  If the
+    input store is itself reordered, the stored ``vertex_perm`` is the
+    composition back to *original* ids, so ``map_ids`` always translates
+    caller-facing ids regardless of how many reorders happened.
+    """
+    n, m = store.n, store.m
+    deg = np.asarray(store.degrees(), np.int64)
+    order = np.argsort(-deg, kind="stable")  # old ids in new-id order
+    perm = np.empty(n, np.int64)
+    perm[order] = np.arange(n)
+
+    writer = StoreWriter(out_path)
+    indptr_mm = writer.create_array("indptr", np.int64, (n + 1,))
+    indices_mm = writer.create_array("indices", np.int32, (m,))
+    weights_mm = writer.create_array("weights", np.float32, (m,))
+    new_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(deg[order], out=new_indptr[1:])
+    indptr_mm[...] = new_indptr
+
+    old_indptr = np.asarray(store.indptr)
+    for v0 in range(0, n, chunk_vertices):
+        v1 = min(v0 + chunk_vertices, n)
+        ovs = order[v0:v1]
+        lens = deg[ovs]
+        tot = int(lens.sum())
+        if tot == 0:
+            continue
+        offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        gather = np.repeat(old_indptr[ovs], lens) + (
+            np.arange(tot) - np.repeat(offs, lens)
+        )
+        e0, e1 = int(new_indptr[v0]), int(new_indptr[v1])
+        indices_mm[e0:e1] = perm[np.asarray(store.indices[gather], np.int64)]
+        weights_mm[e0:e1] = store.weights[gather]
+
+    prior = store.vertex_perm
+    full_perm = perm if prior is None else perm[np.asarray(prior, np.int64)]
+    writer.put_array("vertex_perm", full_perm.astype(np.int32))
+    writer.set_meta(
+        n=n,
+        m=m,
+        symmetric=store.manifest.get("symmetric", True),
+        weight_range=store.manifest.get("weight_range"),
+        partition=None,
+        reorder="degree_desc",
+        source=f"hub_sort({store.manifest.get('source', '?')})",
+    )
+    return writer.close(), perm

@@ -107,9 +107,40 @@ class _Pending:
 
 
 class SteinerServer:
-    """Batched Steiner query server over one resident :class:`Graph`."""
+    """Batched Steiner query server over one resident :class:`Graph`.
 
-    def __init__(self, g: Graph, config: ServeConfig = ServeConfig()):
+    The graph can come from memory (``g``) or straight off disk
+    (``graph_path`` naming a ``.gstore`` directory built with
+    ``python -m repro.graphstore build`` — the server boots from the
+    memmapped CSR without any caller-side edge-list materialization).
+    A :class:`repro.graphstore.GraphStore` instance is also accepted
+    as ``g``.  Hub-sorted stores are transparent to callers: submitted
+    seed ids are translated through the store's ``vertex_perm`` at
+    admission (``materialize_edges`` output, if enabled, is in the
+    store's relabeled id space).
+    """
+
+    def __init__(
+        self,
+        g: Optional[Graph] = None,
+        config: ServeConfig = ServeConfig(),
+        *,
+        graph_path: Optional[str] = None,
+    ):
+        if (g is None) == (graph_path is None):
+            raise ValueError("pass exactly one of g= or graph_path=")
+        if graph_path is not None:
+            from repro.graphstore import open_store
+
+            g = open_store(graph_path)
+        # hub-sorted stores relabel vertices; queries arrive in ORIGINAL
+        # ids, so admission translates through the stored permutation
+        self._vertex_perm = None
+        if hasattr(g, "to_graph"):  # GraphStore → resident Graph
+            perm = g.vertex_perm
+            if perm is not None:
+                self._vertex_perm = np.asarray(perm)
+            g = g.to_graph()
         self.g = g
         self.config = config
         # one prepared solver handle: every micro-batch launch dispatches
@@ -157,6 +188,8 @@ class SteinerServer:
                 f"seed ids must be in [0, {self.g.n}), got "
                 f"[{arr.min()}, {arr.max()}]"
             )
+        if self._vertex_perm is not None:  # original ids → stored ids
+            seeds = self._vertex_perm[arr]
         p = planmod.plan_query(seeds, self.config.buckets)
         t = self._next_ticket
         self._next_ticket += 1

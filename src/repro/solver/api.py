@@ -15,11 +15,18 @@ placement + mesh for the distributed backends — exactly once, and returns
 a :class:`PreparedGraph` whose repeated ``solve`` calls dispatch to a
 cached jitted/shard_mapped executable (zero re-traces; asserted in
 ``tests/test_solver.py``).
+
+``prepare`` also accepts an on-disk :class:`repro.graphstore.GraphStore`
+(from ``open_store``) for every backend: single/batch materialize the
+padded COO from the memmapped CSR, mode="frontier" builds its ELL view
+chunkwise from disk (skipping the O(E)-Python path), and the mesh
+backends load the store's per-device shards directly when a matching
+partition was prebuilt — see DESIGN.md §Graphstore.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import TYPE_CHECKING, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,6 +34,9 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.solver.config import SolverConfig
 from repro.solver.registry import SolveOutput, get_backend
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.graphstore.loader import GraphStore
 
 
 class PreparedGraph:
@@ -37,11 +47,17 @@ class PreparedGraph:
     device-placed edge arrays) and the per-|S| executable cache.
     """
 
-    def __init__(self, config: SolverConfig, backend, graph: Graph, artifacts):
+    def __init__(self, config: SolverConfig, backend, graph, artifacts):
         self.config = config
+        # what prepare() was given: a Graph, or a GraphStore for handles
+        # prepared straight off disk
         self.graph = graph
         self._backend = backend
         self._artifacts = artifacts
+        # hub-sorted stores relabel vertices; solve() takes ORIGINAL ids
+        # and translates through the persisted permutation
+        perm = getattr(graph, "vertex_perm", None)
+        self._vertex_perm = None if perm is None else np.asarray(perm)
 
     @property
     def backend(self) -> str:
@@ -68,8 +84,13 @@ class PreparedGraph:
         """Solves one query — (S,) seed ids, or (B, S) for backend="batch".
 
         The static seed count is taken from the trailing axis; repeated
-        calls with the same shape reuse one compiled executable.
+        calls with the same shape reuse one compiled executable.  Seed
+        ids are always in the graph's *original* numbering: handles
+        prepared from a hub-sorted store translate them through the
+        stored ``vertex_perm`` here.
         """
+        if self._vertex_perm is not None:
+            seeds = self._vertex_perm[np.asarray(seeds, np.int64)]
         if self._backend.seeds_ndim == 2:
             seeds = jnp.asarray(seeds, jnp.int32)
             if seeds.ndim != 2:
@@ -98,7 +119,12 @@ class SteinerSolver:
         self._backend = get_backend(config.backend)
         self._backend.validate(config)
 
-    def prepare(self, graph: Graph) -> PreparedGraph:
-        """Runs the backend's one-time preprocessing for ``graph``."""
+    def prepare(self, graph: Union[Graph, "GraphStore"]) -> PreparedGraph:
+        """Runs the backend's one-time preprocessing for ``graph``.
+
+        ``graph`` may be an in-memory :class:`~repro.core.graph.Graph` or
+        an on-disk :class:`repro.graphstore.GraphStore`; stores are
+        materialized / shard-loaded by the backend exactly once here.
+        """
         artifacts = self._backend.prepare(self.config, graph)
         return PreparedGraph(self.config, self._backend, graph, artifacts)

@@ -116,6 +116,21 @@ def _exec_batch(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
 # ----------------------------------------------------------------------------
 
 
+def _as_graph_and_store(graph):
+    """Splits prepare()'s input into (Graph-or-None, GraphStore-or-None).
+
+    Accepting :class:`repro.graphstore.GraphStore` here (instead of at
+    the facade) lets each backend choose the cheapest path off disk: the
+    COO materialization, the chunked ELL build, or a per-shard partition
+    load that never expands the edge list at all.
+    """
+    from repro.graphstore.loader import GraphStore
+
+    if isinstance(graph, GraphStore):
+        return None, graph
+    return graph, None
+
+
 class _Backend:
     """Shared validation: config/backend cross-checks beyond the dataclass."""
 
@@ -142,8 +157,16 @@ class SingleBackend(_Backend):
     preprocessing = ("ell_view [mode=frontier]",)
     seeds_ndim = 1
 
-    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
-        art: dict = {"graph": g}
+    def prepare(self, cfg: SolverConfig, g) -> dict:
+        g, store = _as_graph_and_store(g)
+        if store is not None:
+            art: dict = {"graph": store.to_graph(), "store": store}
+            if cfg.mode == "frontier":
+                # chunked CSR→ELL straight off the memmaps — skips both the
+                # COO round-trip and the O(E)-Python to_ell loop
+                art["ell"] = store.ell(cfg.ell_width)
+            return art
+        art = {"graph": g}
         if cfg.mode == "frontier":
             # the O(E) host-Python ELL build happens exactly once per handle
             art["ell"] = ell_view_cached(g, cfg.ell_width)
@@ -200,7 +223,10 @@ class BatchBackend(_Backend):
     preprocessing = ()
     seeds_ndim = 2
 
-    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+    def prepare(self, cfg: SolverConfig, g) -> dict:
+        g, store = _as_graph_and_store(g)
+        if store is not None:
+            return {"graph": store.to_graph(), "store": store}
         return {"graph": g}
 
     def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
@@ -263,11 +289,38 @@ class Mesh1DBackend(_Backend):
     preprocessing = ("mesh", "partition_1d", "device_put")
     seeds_ndim = 1
 
-    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+    def prepare(self, cfg: SolverConfig, g) -> dict:
         from repro.core.dist_steiner import partition_edges
 
+        g, store = _as_graph_and_store(g)
         n_replica, n_blocks = cfg.mesh_shape
         mesh = _device_mesh(cfg.mesh_shape, ("data", "model"))
+        if store is not None:
+            meta = store.partition_meta
+            if (
+                meta
+                and meta.get("scheme") == "1d"
+                and (meta["n_replica"], meta["n_blocks"]) == (n_replica, n_blocks)
+            ):
+                # per-shard load of the prebuilt partition: the full edge
+                # list is never expanded on the host
+                part = store.load_partition()
+            else:
+                cs, cd, cw = store.coo()  # already both directions
+                part = partition_edges(
+                    cs, cd, cw, store.n,
+                    n_replica=n_replica, n_blocks=n_blocks, symmetrize=False,
+                )
+            edges = _place_edges(
+                mesh, (part.src, part.dst, part.w), ("data", "model")
+            )
+            return {
+                "graph": store,
+                "mesh": mesh,
+                "part": part,
+                "edges": edges,
+                "executables": {},
+            }
         # g is already symmetric + padded; padding edges (0, 0, +inf) stay
         # inert through the partition (they can never win a relaxation)
         part = partition_edges(
@@ -366,11 +419,35 @@ class Mesh2DBackend(_Backend):
     preprocessing = ("mesh", "partition_2d", "device_put")
     seeds_ndim = 1
 
-    def prepare(self, cfg: SolverConfig, g: Graph) -> dict:
+    def prepare(self, cfg: SolverConfig, g) -> dict:
         from repro.core.dist_steiner_2d import partition_edges_2d
 
+        g, store = _as_graph_and_store(g)
         R, C = cfg.mesh_shape
         mesh = _device_mesh(cfg.mesh_shape, ("data", "model"))
+        if store is not None:
+            meta = store.partition_meta
+            if (
+                meta
+                and meta.get("scheme") == "2d"
+                and (meta["R"], meta["C"]) == (R, C)
+            ):
+                part = store.load_partition_2d()
+            else:
+                cs, cd, cw = store.coo()
+                part = partition_edges_2d(
+                    cs, cd, cw, store.n, R=R, C=C, symmetrize=False
+                )
+            edges = _place_edges(
+                mesh, (part.src_row, part.dst_col, part.w), ("data", "model")
+            )
+            return {
+                "graph": store,
+                "mesh": mesh,
+                "part": part,
+                "edges": edges,
+                "executables": {},
+            }
         part = partition_edges_2d(
             np.asarray(g.src),
             np.asarray(g.dst),
