@@ -4,10 +4,12 @@ Two benches:
 
 ``--bench handle`` (default)
     Real execution on the local backend: for each Voronoi mode
-    (dense / bucket / frontier) measure the COLD first solve (trace +
-    compile + run) against steady-state solves through a prepared
-    :class:`repro.solver.SteinerSolver` handle, plus the one-time
-    ``prepare()`` cost (ELL build for frontier).  Writes
+    (dense / bucket / frontier / pallas) measure the COLD first solve
+    (trace + compile + run) against steady-state solves through a
+    prepared :class:`repro.solver.SteinerSolver` handle, plus the
+    one-time ``prepare()`` cost (ELL build for frontier/pallas; the
+    pallas row is the kernel path — compiled on TPU/GPU, interpreter
+    fallback on CPU).  Writes
     ``BENCH_steiner.json`` at the repo root (same shape as
     ``BENCH_serve.json``) so the perf trajectory covers the core
     pipeline, not just serving.
@@ -43,7 +45,7 @@ ROOT = Path(__file__).resolve().parent.parent
 OUT_HANDLE = ROOT / "BENCH_steiner.json"
 OUT_ROOFLINE = Path(__file__).resolve().parent / "results" / "perf"
 
-MODES = ("dense", "bucket", "frontier")
+MODES = ("dense", "bucket", "frontier", "pallas")
 
 
 # ----------------------------------------------------------------------------

@@ -39,6 +39,18 @@ SOLVER_PRESETS = {
     # |S| = 10240: S² pair table is 400 MB of f32 — chunk the Allreduce
     # (paper §V-F); int16 labels cut steady-state gather wire by 25%.
     "clw_10k": _BASE.replace(pair_chunks=8, lab_i16=True),
+    # Single-device kernel fast path: the Pallas min-plus relaxation
+    # (compiled on TPU/GPU, interpreter fallback on CPU) behind the
+    # "batch" backend — the serving engine reaches the same executables
+    # via ServeConfig(mode="pallas").
+    "serve_pallas": SolverConfig(
+        backend="batch",
+        mode="pallas",
+        mst_algo="prim",
+        max_iters=10_000,
+        ell_width=32,
+        block_rows=256,
+    ),
 }
 
 

@@ -19,7 +19,7 @@ from repro.core.steiner import (
     run_pipeline,
     steiner_tree,
 )
-from repro.core.tree import SteinerTree, tree_edge_list
+from repro.core.tree import SteinerTree, tree_edge_list, tree_edge_sets
 from repro.core.voronoi import (
     VoronoiState,
     VoronoiStats,
@@ -40,6 +40,7 @@ __all__ = [
     "steiner_tree",
     "SteinerTree",
     "tree_edge_list",
+    "tree_edge_sets",
     "VoronoiState",
     "VoronoiStats",
     "voronoi_cells",

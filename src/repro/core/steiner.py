@@ -123,12 +123,13 @@ def steiner_tree(
       g: symmetric weighted graph (padded COO).
       seeds: (S,) int32 seed vertex ids.
       num_seeds: static |S| (defaults to seeds.shape[0]).
-      mode: Voronoi relaxation schedule — "dense" | "bucket" | "frontier".
+      mode: Voronoi relaxation schedule — "dense" | "bucket" | "frontier"
+        | "pallas" (the min-plus kernel of :mod:`repro.kernels.minplus`).
       mst_algo: "prim" (paper-faithful sequential analogue) | "boruvka".
       delta: bucket width (mode="bucket").
       max_iters: safety cap on relaxation rounds.
-      ell: prebuilt ELL adjacency for mode="frontier"; a memoized view
-        keyed on ``(id(g), ell_width)`` is used when omitted.
+      ell: prebuilt ELL adjacency for mode="frontier"/"pallas"; a memoized
+        view keyed on ``(id(g), ell_width)`` is used when omitted.
       ell_width: ELL row width when building the view here.
       frontier_size: top-K frontier rows per round (mode="frontier").
 

@@ -133,19 +133,45 @@ def extract_tree(
     )
 
 
-def tree_edge_list(st: VoronoiState, tree: SteinerTree):
-    """Host-side: materializes the undirected edge set {(u, v)} of G_S."""
+def tree_edge_sets(st: VoronoiState, tree: SteinerTree, n_lanes=None):
+    """Host-side: the undirected edge set {(u, v)} of G_S per batch lane.
+
+    The ONE edge-materialization implementation — the single-query
+    :func:`tree_edge_list` and the serve engine's per-lane result
+    assembly both delegate here.
+
+    Args:
+      st, tree: converged state + extracted tree; arrays may carry a
+        leading (B,) batch axis (the "batch" backend's output) or none
+        (one lane).
+      n_lanes: materialize only the first ``n_lanes`` lanes (the serve
+        engine's distinct-query prefix; the rest are inert padding).
+
+    Returns:
+      list of ``frozenset[(u, v)]``, one per materialized lane.
+    """
     import numpy as np
 
-    pred = np.asarray(st.pred)
-    pe = np.asarray(tree.path_edge)
-    out = set()
-    for v in np.nonzero(pe)[0]:
-        a, b = int(pred[v]), int(v)
-        out.add((min(a, b), max(a, b)))
-    bu = np.asarray(tree.bridge_u)
-    bv = np.asarray(tree.bridge_v)
-    for i in np.nonzero(np.asarray(tree.bridge_valid))[0]:
-        a, b = int(bu[i]), int(bv[i])
-        out.add((min(a, b), max(a, b)))
+    pred = np.atleast_2d(np.asarray(st.pred))
+    pe = np.atleast_2d(np.asarray(tree.path_edge))
+    bu = np.atleast_2d(np.asarray(tree.bridge_u))
+    bv = np.atleast_2d(np.asarray(tree.bridge_v))
+    bvalid = np.atleast_2d(np.asarray(tree.bridge_valid))
+    lanes = pe.shape[0] if n_lanes is None else n_lanes
+    out = []
+    for i in range(lanes):
+        es = set()
+        for v in np.nonzero(pe[i])[0]:
+            a, b = int(pred[i, v]), int(v)
+            es.add((min(a, b), max(a, b)))
+        for j in np.nonzero(bvalid[i])[0]:
+            a, b = int(bu[i, j]), int(bv[i, j])
+            es.add((min(a, b), max(a, b)))
+        out.append(frozenset(es))
     return out
+
+
+def tree_edge_list(st: VoronoiState, tree: SteinerTree):
+    """Host-side: materializes the undirected edge set {(u, v)} of G_S
+    (single lane; thin wrapper over :func:`tree_edge_sets`)."""
+    return set(tree_edge_sets(st, tree)[0])

@@ -90,7 +90,9 @@ def relax_dense(
         ``dist[src] + w``. Callers mask inactive edges with +inf.
 
     Returns:
-      (new_state, improved_count f32, attempted_count f32).
+      (new_state, upd) — ``upd`` is the (N,) bool mask of vertices whose
+      (dist, lab, pred) strictly improved this round (callers derive the
+      improved/attempted counts from it).
     """
     n = g.n
     S_sentinel = jnp.int32(jnp.iinfo(jnp.int32).max)
@@ -128,9 +130,6 @@ def _changed(a: VoronoiState, b: VoronoiState) -> jax.Array:
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("mode", "max_iters")
-)
 def voronoi_cells(
     g: Graph,
     seeds: jax.Array,
@@ -145,12 +144,33 @@ def voronoi_cells(
       g: symmetric weighted graph.
       seeds: (S,) int32 seed vertex ids.
       mode: "dense" (FIFO analogue) or "bucket" (priority analogue).
-      delta: bucket width for mode="bucket"; default mean finite weight.
+      delta: bucket width for mode="bucket"; must be > 0 (a zero/negative
+        width never advances the bucket threshold, silently spinning
+        through the full round cap); default mean finite weight.
       max_iters: safety cap on rounds (default 4n + 64).
 
     Returns:
       (VoronoiState, VoronoiStats)
     """
+    # validate eagerly when delta is a concrete host scalar (dense mode
+    # ignores delta, so only bucket mode rejects); traced values bypass
+    # this isinstance check — the bucket loop's stall guard covers them
+    if mode == "bucket" and isinstance(delta, (int, float)) and not delta > 0:
+        raise ValueError(f"delta must be positive, got {delta}")
+    return _voronoi_cells(g, seeds, mode=mode, delta=delta, max_iters=max_iters)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "max_iters")
+)
+def _voronoi_cells(
+    g: Graph,
+    seeds: jax.Array,
+    *,
+    mode: str,
+    delta: Optional[float],
+    max_iters: Optional[int],
+) -> tuple[VoronoiState, VoronoiStats]:
     n = g.n
     cap = jnp.int32(min(max_iters if max_iters is not None else 4 * n + 64, 2**31 - 2))
     st0 = init_state(n, seeds)
@@ -200,8 +220,12 @@ def voronoi_cells(
             # Terminate only when a no-change round had EVERY source active
             # (such a round is equivalent to a dense fixpoint check);
             # otherwise advance the bucket threshold by Δ and keep going.
+            # Stall guard: a non-positive Δ (only reachable as a traced
+            # value that bypassed the eager validation) never advances
+            # theta — exit at the first quiescent round instead of
+            # silently burning the full round cap.
             max_fin = jnp.max(jnp.where(jnp.isfinite(new.dist), new.dist, -INF))
-            done = ~changed & (theta >= max_fin)
+            done = ~changed & ((theta >= max_fin) | (d <= 0))
             theta = jnp.where(changed, theta, theta + d)
             return (
                 new,
@@ -223,7 +247,12 @@ def voronoi_cells(
         )
         return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
 
-    raise ValueError(f"unknown mode: {mode!r} (use 'dense' | 'bucket')")
+    raise ValueError(
+        f"unknown mode: {mode!r} — this entry point runs 'dense' | 'bucket'; "
+        f"mode='frontier' runs via voronoi_cells_frontier over the ELL "
+        f"view, and mode='pallas' via "
+        f"repro.kernels.minplus.ops.voronoi_cells_pallas"
+    )
 
 
 # ----------------------------------------------------------------------------

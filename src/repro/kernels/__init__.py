@@ -18,3 +18,14 @@ segmin/   — bucketed masked-min segment reduction (cross-cell / COO
 Each kernel ships ``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure
 jnp oracle); tests sweep shapes/dtypes with ``interpret=True``.
 """
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Platform policy shared by every Pallas wrapper in this package:
+    compiled lowering on TPU/GPU, the interpreter everywhere else (CPU
+    has no Mosaic/Triton target).  Wrappers take ``interpret=None`` to
+    mean "resolve via this policy"; pass True/False to force a
+    direction (``SolverConfig.interpret`` plumbs the override)."""
+    return jax.default_backend() not in ("tpu", "gpu")

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 IMAX = jnp.iinfo(jnp.int32).max
 
 
@@ -79,7 +81,7 @@ def minplus_call(
     lab: jax.Array,
     *,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """VMEM-resident min-plus relaxation.
 
@@ -89,10 +91,13 @@ def minplus_call(
       dist: (N,) distances (f32/bf16).
       lab: (N,) int32 labels.
       block_rows: rows per grid step; R must be a multiple.
+      interpret: None → :func:`default_interpret` per platform.
 
     Returns:
       (m, ml, ms): (R,) f32 / i32 / i32 per-row lexicographic minima.
     """
+    if interpret is None:
+        interpret = default_interpret()
     R, K = nbr.shape
     N = dist.shape[0]
     assert R % block_rows == 0, (R, block_rows)
@@ -159,13 +164,16 @@ def minplus_blocked_call(
     *,
     block_rows: int = 256,
     src_block: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Source-blocked variant for beyond-VMEM distance vectors.
 
     Grid is ``(R/block_rows, N/src_block)``; the output tile is revisited
     across the second grid dimension and lexicographically accumulated.
+    ``interpret=None`` resolves via :func:`default_interpret`.
     """
+    if interpret is None:
+        interpret = default_interpret()
     R, K = nbr.shape
     N = dist.shape[0]
     assert R % block_rows == 0 and N % src_block == 0, (R, N)

@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.segmin.segmin import segmin_bucketed_call
 
 
@@ -19,13 +20,17 @@ def segmin_bucketed(
     *,
     vb: int,
     edge_block: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Lexicographic (cand, lab, src) segment-min over bucketed edges.
 
     Pads EB up to a multiple of ``edge_block`` with inert +inf lanes, then
-    dispatches the Pallas kernel. See ``segmin.py`` for the tile contract.
+    dispatches the Pallas kernel (``interpret=None`` resolves per platform
+    via :func:`repro.kernels.default_interpret`). See ``segmin.py`` for
+    the tile contract.
     """
+    if interpret is None:
+        interpret = default_interpret()
     NB, EB = cand.shape
     pad = (-EB) % edge_block
     if pad:

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 IMAX = jnp.iinfo(jnp.int32).max
 
 
@@ -69,9 +71,10 @@ def segmin_bucketed_call(
     *,
     vb: int,
     edge_block: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    """Bucketed lexicographic segment-min.
+    """Bucketed lexicographic segment-min (``interpret=None`` resolves
+    per platform via :func:`repro.kernels.default_interpret`).
 
     Args:
       cand: (NB, EB) f32/bf16 per-edge candidates (+inf = inert padding).
@@ -84,6 +87,8 @@ def segmin_bucketed_call(
     Returns:
       (m, ml, ms): (NB, vb) lexicographic minima per bucket vertex.
     """
+    if interpret is None:
+        interpret = default_interpret()
     NB, EB = cand.shape
     assert EB % edge_block == 0, (EB, edge_block)
     grid = (NB, EB // edge_block)

@@ -48,7 +48,9 @@ def steiner_tree_batch(
       seeds: (B, S) int32 seed vertex ids; rows may carry duplicate seeds
         (inert padding — see :func:`repro.serve.plan.pad_seed_set`).
       num_seeds: static S (defaults to seeds.shape[1]).
-      mode: Voronoi relaxation schedule — "dense" | "bucket".
+      mode: Voronoi relaxation schedule — "dense" | "bucket" | "pallas"
+        (the min-plus kernel path; a memoized ELL view is built on first
+        use).
       mst_algo: "prim" | "boruvka".
       delta: bucket width (mode="bucket").
       max_iters: safety cap on relaxation rounds.

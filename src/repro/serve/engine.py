@@ -28,11 +28,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.graph import Graph
+from repro.core.tree import tree_edge_sets
 from repro.serve import plan as planmod
 from repro.solver import SolverConfig, SteinerSolver
 
@@ -44,7 +45,7 @@ class ServeConfig:
     buckets: Tuple[int, ...] = planmod.DEFAULT_BUCKETS
     max_batch: int = 8  # B — lanes per micro-batch executable
     cache_capacity: int = 4096  # LRU entries (0 disables caching)
-    mode: str = "bucket"  # Voronoi schedule: "dense" | "bucket"
+    mode: str = "bucket"  # Voronoi schedule: "dense" | "bucket" | "pallas"
     mst_algo: str = "prim"
     delta: Optional[float] = None
     max_iters: Optional[int] = None
@@ -114,10 +115,13 @@ class SteinerServer:
     ``python -m repro.graphstore build`` — the server boots from the
     memmapped CSR without any caller-side edge-list materialization).
     A :class:`repro.graphstore.GraphStore` instance is also accepted
-    as ``g``.  Hub-sorted stores are transparent to callers: submitted
-    seed ids are translated through the store's ``vertex_perm`` at
-    admission (``materialize_edges`` output, if enabled, is in the
-    store's relabeled id space).
+    as ``g``.  Stores are handed to ``SteinerSolver.prepare`` as-is, so
+    the backend keeps its off-disk fast paths (``mode="pallas"`` builds
+    its ELL view chunkwise from the memmaps) and hub-sorted stores stay
+    transparent to callers: the prepared handle translates submitted
+    ORIGINAL seed ids through the store's ``vertex_perm`` at solve time
+    (``materialize_edges`` output, if enabled, is in the store's
+    relabeled id space).
     """
 
     def __init__(
@@ -133,15 +137,6 @@ class SteinerServer:
             from repro.graphstore import open_store
 
             g = open_store(graph_path)
-        # hub-sorted stores relabel vertices; queries arrive in ORIGINAL
-        # ids, so admission translates through the stored permutation
-        self._vertex_perm = None
-        if hasattr(g, "to_graph"):  # GraphStore → resident Graph
-            perm = g.vertex_perm
-            if perm is not None:
-                self._vertex_perm = np.asarray(perm)
-            g = g.to_graph()
-        self.g = g
         self.config = config
         # one prepared solver handle: every micro-batch launch dispatches
         # to the "batch" backend's cached executables (one per bucket)
@@ -155,6 +150,12 @@ class SteinerServer:
                 batch_size=config.max_batch,
             )
         ).prepare(g)
+        # the resident COO graph — prepare() already materialized it for
+        # GraphStore inputs, so reuse that artifact instead of a second
+        # O(M) expansion
+        self.g = (
+            self._handle.artifact("graph") if hasattr(g, "to_graph") else g
+        )
         self.cache = LRUCache(config.cache_capacity)
         self._queues: Dict[int, "collections.deque[_Pending]"] = {
             b: collections.deque() for b in sorted(config.buckets)
@@ -188,8 +189,8 @@ class SteinerServer:
                 f"seed ids must be in [0, {self.g.n}), got "
                 f"[{arr.min()}, {arr.max()}]"
             )
-        if self._vertex_perm is not None:  # original ids → stored ids
-            seeds = self._vertex_perm[arr]
+        # queues/cache keys stay in ORIGINAL ids; hub-sorted stores are
+        # translated by the prepared handle at solve time
         p = planmod.plan_query(seeds, self.config.buckets)
         t = self._next_ticket
         self._next_ticket += 1
@@ -232,8 +233,10 @@ class SteinerServer:
         nedges = np.asarray(out.num_edges)
         edges = None
         if self.config.materialize_edges:
-            edges = _edge_sets(
-                res, seed_batch.shape[0] if n_real is None else n_real
+            edges = tree_edge_sets(
+                res.state,
+                res.tree,
+                seed_batch.shape[0] if n_real is None else n_real,
             )
         return totals, nedges, edges
 
@@ -346,23 +349,3 @@ class SteinerServer:
             ),
             "batches_per_bucket": dict(self._batches),
         }
-
-
-def _edge_sets(res, n_lanes: int) -> List[FrozenSet[Tuple[int, int]]]:
-    """Host-side undirected edge sets of the first ``n_lanes`` lanes."""
-    pred = np.asarray(res.state.pred)
-    pe = np.asarray(res.tree.path_edge)
-    bu = np.asarray(res.tree.bridge_u)
-    bv = np.asarray(res.tree.bridge_v)
-    bvalid = np.asarray(res.tree.bridge_valid)
-    out: List[FrozenSet[Tuple[int, int]]] = []
-    for i in range(n_lanes):
-        es: Set[Tuple[int, int]] = set()
-        for v in np.nonzero(pe[i])[0]:
-            a, b = int(pred[i, v]), int(v)
-            es.add((min(a, b), max(a, b)))
-        for j in np.nonzero(bvalid[i])[0]:
-            a, b = int(bu[i, j]), int(bv[i, j])
-            es.add((min(a, b), max(a, b)))
-        out.append(frozenset(es))
-    return out

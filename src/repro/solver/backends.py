@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import steiner as smod
 from repro.core import voronoi as vmod
 from repro.core.graph import EllGraph, Graph, ell_view_cached
+from repro.kernels.minplus import ops as kops
 from repro.solver.config import BACKEND_MODES, SolverConfig
 from repro.solver.registry import SolveOutput, register_backend
 
@@ -91,6 +92,132 @@ def _exec_single_frontier(
     return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
 
 
+def _pallas_voronoi(ell, seeds, cfg_kw):
+    """Trace-level dispatch between the full-adjacency and top-K-compacted
+    kernel schedules (``cfg_kw`` carries the static kernel knobs)."""
+    if cfg_kw["frontier"]:
+        return kops.voronoi_cells_pallas_frontier(
+            ell,
+            seeds,
+            frontier_size=cfg_kw["frontier_size"],
+            block_rows=cfg_kw["block_rows"],
+            src_block=cfg_kw["src_block"],
+            interpret=cfg_kw["interpret"],
+            max_iters=cfg_kw["max_iters"],
+        )
+    return kops.voronoi_cells_pallas(
+        ell,
+        seeds,
+        block_rows=cfg_kw["block_rows"],
+        src_block=cfg_kw["src_block"],
+        interpret=cfg_kw["interpret"],
+        max_iters=cfg_kw["max_iters"],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_seeds",
+        "mst_algo",
+        "block_rows",
+        "src_block",
+        "interpret",
+        "frontier",
+        "frontier_size",
+        "max_iters",
+    ),
+)
+def _exec_single_pallas(
+    g,
+    ell,
+    seeds,
+    *,
+    num_seeds,
+    mst_algo,
+    block_rows,
+    src_block,
+    interpret,
+    frontier,
+    frontier_size,
+    max_iters,
+):
+    _bump("single")
+    st, stats = _pallas_voronoi(
+        ell,
+        seeds,
+        dict(
+            frontier=frontier,
+            frontier_size=frontier_size,
+            block_rows=block_rows,
+            src_block=src_block,
+            interpret=interpret,
+            max_iters=max_iters,
+        ),
+    )
+    return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_seeds",
+        "mst_algo",
+        "block_rows",
+        "src_block",
+        "interpret",
+        "frontier",
+        "frontier_size",
+        "max_iters",
+    ),
+)
+def _exec_batch_pallas(
+    g,
+    ell,
+    seeds,
+    *,
+    num_seeds,
+    mst_algo,
+    block_rows,
+    src_block,
+    interpret,
+    frontier,
+    frontier_size,
+    max_iters,
+):
+    _bump("batch")
+    kw = dict(
+        frontier=frontier,
+        frontier_size=frontier_size,
+        block_rows=block_rows,
+        src_block=src_block,
+        interpret=interpret,
+        max_iters=max_iters,
+    )
+
+    def one(row):
+        st, stats = _pallas_voronoi(ell, row, kw)
+        return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
+
+    return jax.vmap(one)(seeds)
+
+
+def _pallas_static_kw(cfg: SolverConfig) -> dict:
+    """The static kernel knobs of one config, with ``interpret=None``
+    resolved per platform (compiled on TPU/GPU, interpreter on CPU)."""
+    interp = cfg.interpret
+    if interp is None:
+        interp = kops.default_interpret()
+    return dict(
+        block_rows=cfg.block_rows,
+        src_block=cfg.src_block,
+        interpret=interp,
+        frontier=cfg.pallas_frontier,
+        frontier_size=cfg.frontier_size,
+        max_iters=cfg.max_iters,
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_seeds", "mode", "mst_algo", "max_iters")
 )
@@ -137,6 +264,8 @@ class _Backend:
     name = "?"
     preprocessing: tuple = ()
     seeds_ndim = 1
+    # modes whose executables consume the ELL view (single-device backends)
+    ell_modes: tuple = ()
 
     def validate(self, cfg: SolverConfig) -> None:
         if cfg.backend != self.name:
@@ -149,28 +278,36 @@ class _Backend:
                 f"mode {cfg.mode!r} is not supported by backend {self.name!r}"
             )
 
-
-@register_backend("single")
-class SingleBackend(_Backend):
-    """One query, one device, jitted; all three Voronoi schedules."""
-
-    preprocessing = ("ell_view [mode=frontier]",)
-    seeds_ndim = 1
-
     def prepare(self, cfg: SolverConfig, g) -> dict:
+        """Single-device preprocessing: the resident COO graph, plus the
+        ELL view when ``cfg.mode`` is in :attr:`ell_modes`.
+
+        GraphStore inputs materialize the COO once and build the ELL view
+        chunkwise straight off the memmaps (skipping both the COO
+        round-trip and the O(E)-Python ``to_ell`` loop); in-memory graphs
+        go through the bounded ``ell_view_cached`` memo, so repeated
+        ``prepare()`` of one resident graph is free.  The mesh backends
+        override this wholesale (partition + device placement).
+        """
         g, store = _as_graph_and_store(g)
         if store is not None:
             art: dict = {"graph": store.to_graph(), "store": store}
-            if cfg.mode == "frontier":
-                # chunked CSR→ELL straight off the memmaps — skips both the
-                # COO round-trip and the O(E)-Python to_ell loop
+            if cfg.mode in self.ell_modes:
                 art["ell"] = store.ell(cfg.ell_width)
             return art
         art = {"graph": g}
-        if cfg.mode == "frontier":
-            # the O(E) host-Python ELL build happens exactly once per handle
+        if cfg.mode in self.ell_modes:
             art["ell"] = ell_view_cached(g, cfg.ell_width)
         return art
+
+
+@register_backend("single")
+class SingleBackend(_Backend):
+    """One query, one device, jitted; all four Voronoi schedules."""
+
+    preprocessing = ("ell_view [mode=frontier|pallas]",)
+    seeds_ndim = 1
+    ell_modes = ("frontier", "pallas")
 
     def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
         res = self.solve_raw(
@@ -205,6 +342,17 @@ class SingleBackend(_Backend):
                 frontier_size=cfg.frontier_size,
                 max_iters=cfg.max_iters,
             )
+        if cfg.mode == "pallas":
+            if ell is None:
+                ell = ell_view_cached(g, cfg.ell_width)
+            return _exec_single_pallas(
+                g,
+                ell,
+                seeds,
+                num_seeds=num_seeds,
+                mst_algo=cfg.mst_algo,
+                **_pallas_static_kw(cfg),
+            )
         return _exec_single_coo(
             g,
             seeds,
@@ -220,17 +368,14 @@ class SingleBackend(_Backend):
 class BatchBackend(_Backend):
     """B queries / launch, vmapped against one resident graph."""
 
-    preprocessing = ()
+    preprocessing = ("ell_view [mode=pallas]",)
     seeds_ndim = 2
-
-    def prepare(self, cfg: SolverConfig, g) -> dict:
-        g, store = _as_graph_and_store(g)
-        if store is not None:
-            return {"graph": store.to_graph(), "store": store}
-        return {"graph": g}
+    ell_modes = ("pallas",)
 
     def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
-        res = self.solve_raw(cfg, artifacts["graph"], seeds, num_seeds)
+        res = self.solve_raw(
+            cfg, artifacts["graph"], seeds, num_seeds, ell=artifacts.get("ell")
+        )
         return SolveOutput(
             total_distance=np.asarray(res.tree.total_distance),
             num_edges=np.asarray(res.tree.num_edges),
@@ -238,11 +383,27 @@ class BatchBackend(_Backend):
         )
 
     def solve_raw(
-        self, cfg: SolverConfig, g: Graph, seeds, num_seeds: int
+        self,
+        cfg: SolverConfig,
+        g: Graph,
+        seeds,
+        num_seeds: int,
+        ell: Optional[EllGraph] = None,
     ) -> smod.SteinerResult:
         seeds = jnp.asarray(seeds, jnp.int32)
         if seeds.ndim != 2:
             raise ValueError(f"seeds must be (B, S), got shape {seeds.shape}")
+        if cfg.mode == "pallas":
+            if ell is None:
+                ell = ell_view_cached(g, cfg.ell_width)
+            return _exec_batch_pallas(
+                g,
+                ell,
+                seeds,
+                num_seeds=num_seeds,
+                mst_algo=cfg.mst_algo,
+                **_pallas_static_kw(cfg),
+            )
         return _exec_batch(
             g,
             seeds,

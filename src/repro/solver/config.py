@@ -18,16 +18,16 @@ import dataclasses
 from typing import Optional, Tuple
 
 BACKENDS: Tuple[str, ...] = ("single", "mesh1d", "mesh2d", "batch")
-MODES: Tuple[str, ...] = ("dense", "bucket", "frontier")
+MODES: Tuple[str, ...] = ("dense", "bucket", "frontier", "pallas")
 MST_ALGOS: Tuple[str, ...] = ("prim", "boruvka")
 
-# Which Voronoi schedules each backend can execute.  "frontier" needs the
-# ELL view + top-K compaction, which only the single-device pipeline
-# implements today; the mesh engines run the paper's dense/Δ-bucket
-# schedules over shard_map.
+# Which Voronoi schedules each backend can execute.  "frontier" and
+# "pallas" need the ELL view, which only the single-device pipelines
+# (jitted / vmapped) consume today; the mesh engines run the paper's
+# dense/Δ-bucket schedules over shard_map.
 BACKEND_MODES = {
-    "single": ("dense", "bucket", "frontier"),
-    "batch": ("dense", "bucket"),
+    "single": ("dense", "bucket", "frontier", "pallas"),
+    "batch": ("dense", "bucket", "pallas"),
     "mesh1d": ("dense", "bucket"),
     "mesh2d": ("dense", "bucket"),
 }
@@ -42,12 +42,23 @@ class SolverConfig:
         "mesh1d" (dst-block shard_map, the paper's MPI design),
         "mesh2d" (src×dst 2D decomposition), "batch" (vmap over a
         leading (B,) query axis against one resident graph).
-      mode: Voronoi relaxation schedule — "dense" | "bucket" | "frontier".
+      mode: Voronoi relaxation schedule — "dense" | "bucket" | "frontier"
+        | "pallas" (the min-plus kernel of :mod:`repro.kernels.minplus`).
       mst_algo: replicated MST on G'1 — "prim" | "boruvka".
       delta: Δ-bucket width (mode="bucket"); None → mean edge weight.
       max_iters: safety cap on relaxation rounds (None → 4n + 64).
-      ell_width: ELL row width when building the frontier view.
-      frontier_size: top-K frontier rows per round (mode="frontier").
+      ell_width: ELL row width when building the frontier/pallas view.
+      frontier_size: top-K frontier rows per round (mode="frontier", and
+        mode="pallas" with ``pallas_frontier=True``).
+      block_rows: ELL rows per Pallas grid step (mode="pallas").
+      src_block: source-block the distance vector into (SB,) VMEM slices
+        (mode="pallas"); None keeps dist/lab VMEM-resident.
+      interpret: Pallas execution override — None resolves per platform
+        (compiled on TPU/GPU, interpreter on CPU), True forces the
+        interpreter, False forces compiled lowering.
+      pallas_frontier: run the top-K work-compacted kernel schedule
+        (O(K·k) per round) instead of full-adjacency kernel rounds
+        (mode="pallas" only).
       batch_size: preferred micro-batch lane count B for the "batch"
         backend (warmup / serving); ``solve`` accepts any leading B.
       mesh_shape: device mesh shape — (n_replica, n_blocks) for "mesh1d",
@@ -65,9 +76,14 @@ class SolverConfig:
     mst_algo: str = "prim"
     delta: Optional[float] = None
     max_iters: Optional[int] = None
-    # mode="frontier"
+    # mode="frontier" / mode="pallas"
     ell_width: int = 32
     frontier_size: int = 1024
+    # mode="pallas"
+    block_rows: int = 256
+    src_block: Optional[int] = None
+    interpret: Optional[bool] = None
+    pallas_frontier: bool = False
     # backend="batch"
     batch_size: int = 8
     # backend="mesh1d"/"mesh2d"
@@ -84,7 +100,8 @@ class SolverConfig:
             )
         if self.mode not in MODES:
             raise ValueError(
-                f"unknown mode: {self.mode!r} (use 'dense' | 'bucket' | 'frontier')"
+                f"unknown mode: {self.mode!r} "
+                f"(use 'dense' | 'bucket' | 'frontier' | 'pallas')"
             )
         if self.mode not in BACKEND_MODES[self.backend]:
             raise ValueError(
@@ -100,10 +117,26 @@ class SolverConfig:
         if self.max_iters is not None and self.max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
         for name in ("ell_width", "frontier_size", "batch_size", "local_steps",
-                     "pair_chunks"):
+                     "pair_chunks", "block_rows"):
             v = getattr(self, name)
             if not (isinstance(v, int) and v >= 1):
                 raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if self.src_block is not None and not (
+            isinstance(self.src_block, int) and self.src_block >= 1
+        ):
+            raise ValueError(
+                f"src_block must be None or a positive int, got {self.src_block!r}"
+            )
+        if self.interpret is not None and not isinstance(self.interpret, bool):
+            raise ValueError(
+                f"interpret must be None (auto), True, or False, "
+                f"got {self.interpret!r}"
+            )
+        if self.pallas_frontier and self.mode != "pallas":
+            raise ValueError(
+                f"pallas_frontier=True requires mode='pallas', "
+                f"got mode={self.mode!r}"
+            )
         ms = self.mesh_shape
         if (
             not isinstance(ms, tuple)

@@ -7,7 +7,10 @@ import pytest
 from repro.core import from_edges, to_ell
 from repro.core import ref
 from repro.core.voronoi import voronoi_cells, voronoi_cells_frontier
-from repro.kernels.minplus.ops import voronoi_cells_pallas
+from repro.kernels.minplus.ops import (
+    voronoi_cells_pallas,
+    voronoi_cells_pallas_frontier,
+)
 
 from helpers import random_instance
 
@@ -42,11 +45,76 @@ def test_voronoi_pallas_matches(trial):
     src, dst, w, n, seeds, edges = random_instance(trial)
     g = from_edges(src, dst, w, n, pad_to=8)
     ell = to_ell(g, k=8, pad_rows_to=64)
-    st_, _ = voronoi_cells_pallas(ell, jnp.asarray(seeds), block_rows=64)
+    st_, stats = voronoi_cells_pallas(ell, jnp.asarray(seeds), block_rows=64)
     dist, lab, pred = ref.voronoi_ref(n, edges, seeds.tolist())
     np.testing.assert_allclose(np.asarray(st_.dist), dist)
     np.testing.assert_array_equal(np.asarray(st_.lab), lab)
     np.testing.assert_array_equal(np.asarray(st_.pred), pred)
+    # real convergence stats, not the old zero placeholder
+    assert float(stats.relaxations) > 0
+    assert float(stats.messages) > 0
+
+
+@pytest.mark.parametrize("src_block", [None, 32])
+@pytest.mark.parametrize("trial", range(3))
+def test_voronoi_pallas_frontier_matches(trial, src_block):
+    """Top-K compacted kernel schedule: same fixpoint as the oracle, for
+    both the VMEM-resident and the source-blocked kernel."""
+    src, dst, w, n, seeds, edges = random_instance(trial)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    ell = to_ell(g, k=8, pad_rows_to=64)
+    st_, stats = voronoi_cells_pallas_frontier(
+        ell,
+        jnp.asarray(seeds),
+        frontier_size=32,
+        block_rows=16,
+        src_block=src_block,
+    )
+    dist, lab, pred = ref.voronoi_ref(n, edges, seeds.tolist())
+    np.testing.assert_allclose(np.asarray(st_.dist), dist)
+    np.testing.assert_array_equal(np.asarray(st_.lab), lab)
+    np.testing.assert_array_equal(np.asarray(st_.pred), pred)
+    assert float(stats.relaxations) > 0
+
+
+def test_bucket_delta_zero_rejected():
+    """delta<=0 never advances the bucket threshold — formerly a silent
+    spin through the full 4n+64 round cap."""
+    src, dst, w, n, seeds, edges = random_instance(0)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    with pytest.raises(ValueError, match="delta must be positive"):
+        voronoi_cells(g, jnp.asarray(seeds), mode="bucket", delta=0.0)
+    with pytest.raises(ValueError, match="delta must be positive"):
+        voronoi_cells(g, jnp.asarray(seeds), mode="bucket", delta=-1.5)
+    # dense mode documents delta as bucket-only and ignores it — no raise
+    st_, _ = voronoi_cells(g, jnp.asarray(seeds), mode="dense", delta=0.0)
+    dist, _, _ = ref.voronoi_ref(n, edges, seeds.tolist())
+    np.testing.assert_allclose(np.asarray(st_.dist), dist)
+
+
+def test_bucket_delta_zero_traced_does_not_spin():
+    """A traced delta bypasses the eager isinstance validation; the
+    bucket loop's stall guard must still exit early, not burn 4n+64."""
+    import jax
+
+    src, dst, w, n, seeds, edges = random_instance(0)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    f = jax.jit(
+        lambda d: voronoi_cells(g, jnp.asarray(seeds), mode="bucket", delta=d)
+    )
+    _, stats = f(0.0)
+    assert int(stats.iterations) < n  # quiescent exit, not the full cap
+
+
+def test_voronoi_cells_frontier_mode_redirect():
+    """The COO entry point's unknown-mode error points at the dedicated
+    frontier/pallas entry points instead of implying two modes exist."""
+    src, dst, w, n, seeds, edges = random_instance(0)
+    g = from_edges(src, dst, w, n, pad_to=8)
+    with pytest.raises(ValueError, match="voronoi_cells_frontier"):
+        voronoi_cells(g, jnp.asarray(seeds), mode="frontier")
+    with pytest.raises(ValueError, match="voronoi_cells_pallas"):
+        voronoi_cells(g, jnp.asarray(seeds), mode="pallas")
 
 
 def test_bucket_fewer_messages_than_dense():

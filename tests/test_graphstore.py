@@ -248,7 +248,7 @@ def parity_setup(tmp_path_factory):
     return path, g, seeds
 
 
-@pytest.mark.parametrize("mode", ["dense", "bucket", "frontier"])
+@pytest.mark.parametrize("mode", ["dense", "bucket", "frontier", "pallas"])
 def test_single_backend_parity_stored_vs_memory(parity_setup, mode):
     path, g, seeds = parity_setup
     cfg = SolverConfig(backend="single", mode=mode)
@@ -257,13 +257,14 @@ def test_single_backend_parity_stored_vs_memory(parity_setup, mode):
     disk = handle.solve(seeds)
     assert disk.total_distance == mem.total_distance
     assert disk.num_edges == mem.num_edges
-    if mode == "frontier":
+    if mode in ("frontier", "pallas"):
         assert handle.artifact("ell") is not None  # chunked disk-side build
 
 
-def test_batch_backend_parity_stored_vs_memory(parity_setup):
+@pytest.mark.parametrize("mode", ["bucket", "pallas"])
+def test_batch_backend_parity_stored_vs_memory(parity_setup, mode):
     path, g, seeds = parity_setup
-    cfg = SolverConfig(backend="batch", mode="bucket")
+    cfg = SolverConfig(backend="batch", mode=mode)
     batch = np.stack([seeds, seeds[::-1]])
     mem = SteinerSolver(cfg).prepare(g).solve(batch)
     disk = SteinerSolver(cfg).prepare(open_store(path)).solve(batch)
@@ -310,6 +311,36 @@ def test_serve_engine_boots_from_graph_path(parity_setup):
         SteinerServer(g, graph_path=path)
     with pytest.raises(ValueError, match="exactly one"):
         SteinerServer()
+
+
+def test_serve_pallas_boots_off_disk_without_to_ell(parity_setup, monkeypatch):
+    """mode="pallas" off disk must take the chunked store.ell build — the
+    O(E)-Python to_ell loop never runs on the graph_path boot."""
+    import repro.core.graph as graphmod
+    from repro.serve import ServeConfig, SteinerServer
+
+    path, g, seeds = parity_setup
+    calls = {"n": 0}
+    real = graphmod.to_ell
+
+    def counting(gg, k, **kw):
+        calls["n"] += 1
+        return real(gg, k, **kw)
+
+    monkeypatch.setattr(graphmod, "to_ell", counting)
+    server = SteinerServer(
+        graph_path=path,
+        config=ServeConfig(mode="pallas", buckets=(8,), max_batch=2),
+    )
+    got = server.query(seeds.tolist()).total_distance
+    assert calls["n"] == 0, "disk boot fell back to the host-Python ELL build"
+    want = (
+        SteinerSolver(SolverConfig(backend="single", mode="pallas"))
+        .prepare(g)
+        .solve(seeds)
+        .total_distance
+    )
+    assert got == want
 
 
 # ----------------------------------------------------------------------------

@@ -90,6 +90,31 @@ def test_segmin_all_padding():
     assert np.all(np.asarray(ms) == IMAX)
 
 
+def test_pallas_iteration_cap_clamped():
+    """Regression: the default 4n+64 round cap must clamp to int32 range —
+    an overflowed (negative) cap exits the while_loop unconverged."""
+    from repro.kernels.minplus.ops import _cap
+
+    big_default = 4 * 2**30 + 64  # what 4n+64 yields for n = 2**30
+    assert int(_cap(None, big_default)) == 2**31 - 2
+    assert int(_cap(7, big_default)) == 7  # explicit max_iters wins
+    assert int(_cap(None, 100)) == 100  # small graphs unaffected
+
+
+@pytest.mark.parametrize(
+    "backend,want",
+    [("tpu", False), ("gpu", False), ("cpu", True), ("METAL", True)],
+)
+def test_default_interpret_platform_policy(monkeypatch, backend, want):
+    """Compiled on TPU/GPU, interpreter fallback on anything else."""
+    import jax
+
+    from repro.kernels import default_interpret
+
+    monkeypatch.setattr(jax, "default_backend", lambda: backend)
+    assert default_interpret() is want
+
+
 def test_minplus_empty_rows():
     """Rows whose every lane is +inf padding return the identity triple."""
     R, K, N = 128, 8, 64

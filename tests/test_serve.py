@@ -147,6 +147,23 @@ def test_randomized_stream_matches_single_query():
         assert ref.tree_is_valid(n, edges, canon.tolist(), r.edges)
 
 
+def test_pallas_mode_server_matches_single_query():
+    """ServeConfig(mode="pallas") drains the same queue through the
+    kernel-path batch executables; results match standalone solves."""
+    g, n, edges = _graph(0)
+    srv = _server(g, mode="pallas")
+    rng = np.random.default_rng(2)
+    queries = [
+        rng.choice(n, size=int(rng.integers(2, 9)), replace=False).tolist()
+        for _ in range(6)
+    ]
+    for q, r in zip(queries, srv.query_many(queries)):
+        canon = np.asarray(canonical_key(q), np.int32)
+        single = steiner_tree(g, jnp.asarray(canon), mode="pallas")
+        assert r.total_distance == float(single.tree.total_distance)
+        assert ref.tree_is_valid(n, edges, canon.tolist(), r.edges)
+
+
 def test_cache_returns_identical_tree_on_repeat():
     g, n, _ = _graph(2)
     srv = _server(g)

@@ -59,6 +59,24 @@ def test_mode_backend_cross_validation():
         SolverConfig(backend="batch", mode="frontier")
     with pytest.raises(ValueError, match="not supported"):
         SolverConfig(backend="mesh1d", mode="frontier")
+    with pytest.raises(ValueError, match="pallas.*not supported"):
+        SolverConfig(backend="mesh1d", mode="pallas")
+    with pytest.raises(ValueError, match="pallas.*not supported"):
+        SolverConfig(backend="mesh2d", mode="pallas")
+
+
+def test_pallas_knobs_validated():
+    with pytest.raises(ValueError, match="block_rows"):
+        SolverConfig(mode="pallas", block_rows=0)
+    with pytest.raises(ValueError, match="src_block"):
+        SolverConfig(mode="pallas", src_block=0)
+    with pytest.raises(ValueError, match="interpret"):
+        SolverConfig(mode="pallas", interpret="yes")
+    with pytest.raises(ValueError, match="pallas_frontier"):
+        SolverConfig(mode="bucket", pallas_frontier=True)
+    # valid combinations construct fine
+    SolverConfig(mode="pallas", pallas_frontier=True, src_block=64)
+    SolverConfig(backend="batch", mode="pallas", interpret=True)
 
 
 def test_scalar_knobs_validated():
@@ -101,6 +119,7 @@ PARITY_SPECS = [
     ("single", "dense"),
     ("single", "bucket"),
     ("single", "frontier"),
+    ("single", "pallas"),
     ("mesh1d", "dense"),
     ("mesh1d", "bucket"),
     ("mesh2d", "bucket"),
@@ -119,6 +138,36 @@ def test_total_distance_identical_across_backends(trial):
             backend,
             mode,
         )
+
+
+@pytest.mark.parametrize("trial", range(2))
+def test_pallas_frontier_variant_parity(trial):
+    """The top-K compacted kernel schedule hits the same fixpoint."""
+    g, n, seeds, edges = _instance(trial)
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    cfg = SolverConfig(
+        backend="single",
+        mode="pallas",
+        pallas_frontier=True,
+        frontier_size=48,
+        block_rows=16,
+    )
+    out = SteinerSolver(cfg).prepare(g).solve(seeds)
+    assert out.total_distance == pytest.approx(d_ref, abs=1e-4)
+
+
+def test_batch_pallas_matches_single():
+    g, n, seeds, edges = _instance(0)
+    rng = np.random.default_rng(4)
+    batch = np.stack(
+        [rng.choice(n, size=5, replace=False) for _ in range(3)]
+    ).astype(np.int32)
+    cfg = SolverConfig(backend="batch", mode="pallas")
+    out = SteinerSolver(cfg).prepare(g).solve(batch)
+    assert out.total_distance.shape == (3,)
+    for i in range(3):
+        single = steiner_tree(g, jnp.asarray(batch[i]), mode="pallas")
+        assert out.total_distance[i] == float(single.tree.total_distance)
 
 
 def test_batch_backend_matches_single():
@@ -191,6 +240,71 @@ def test_frontier_handle_caches_ell_view():
     assert h1.solve(seeds).total_distance == pytest.approx(d_ref, abs=1e-4)
 
 
+def test_pallas_traces_once_and_shares_ell():
+    g, n, seeds, edges = _instance(2)
+    solver = SteinerSolver(SolverConfig(backend="single", mode="pallas"))
+    h1 = solver.prepare(g)
+    h2 = solver.prepare(g)
+    # the memoized ELL view is shared with repeated prepare()
+    assert h1.artifact("ell") is not None
+    assert h1.artifact("ell") is h2.artifact("ell")
+    first = h1.solve(seeds)
+    base = trace_count()
+    rng = np.random.default_rng(1)
+    for _ in range(4):  # same |S|, different seed values
+        s = rng.choice(n, size=len(seeds), replace=False).astype(np.int32)
+        assert h1.solve(s).total_distance > 0
+    assert trace_count() == base, "repeated pallas solve() must not re-trace"
+    assert first.total_distance == h2.solve(seeds).total_distance
+
+
+# ----------------------------------------------------------------------------
+# kernel-path serving invariants (repro.serve.plan contract)
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pallas_frontier", [False, True])
+def test_pallas_duplicate_seed_padding_inert(pallas_frontier):
+    """Duplicate-seed padding (the serve planner's bucket fill) must not
+    change the kernel path's result — mirrors the dense/bucket contract
+    asserted in tests/test_serve.py."""
+    g, n, seeds, edges = _instance(1)
+    cfg = SolverConfig(
+        backend="single",
+        mode="pallas",
+        pallas_frontier=pallas_frontier,
+        frontier_size=48,
+        block_rows=16,
+    )
+    handle = SteinerSolver(cfg).prepare(g)
+    base = handle.solve(seeds)
+    padded = np.concatenate([seeds, np.full(3, seeds[0], np.int32)])
+    out = handle.solve(padded)
+    assert out.total_distance == base.total_distance
+    assert out.num_edges == base.num_edges
+    np.testing.assert_array_equal(
+        np.asarray(out.raw.state.lab), np.asarray(base.raw.state.lab)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out.raw.state.dist), np.asarray(base.raw.state.dist)
+    )
+
+
+@pytest.mark.parametrize("pallas_frontier", [False, True])
+def test_pallas_max_iters_honored(pallas_frontier):
+    g, n, seeds, edges = _instance(1)
+    cfg = SolverConfig(
+        backend="single",
+        mode="pallas",
+        pallas_frontier=pallas_frontier,
+        frontier_size=16,
+        block_rows=16,
+        max_iters=2,
+    )
+    out = SteinerSolver(cfg).prepare(g).solve(seeds)
+    assert int(out.raw.stats.iterations) <= 2
+
+
 def test_shim_path_memoizes_ell(monkeypatch):
     """Repeated mode="frontier" calls through the legacy steiner_tree
     front door must not pay the O(E) host-Python ELL rebuild."""
@@ -228,11 +342,18 @@ def test_ell_view_cached_identity_and_rebuild():
 def test_paper_workload_presets_are_solver_configs():
     from repro.configs.steiner import SOLVER_PRESETS, solver_preset
 
-    assert set(SOLVER_PRESETS) == {"lvj_1k", "ukw_1k", "clw_10k"}
-    for name in SOLVER_PRESETS:
+    assert set(SOLVER_PRESETS) == {
+        "lvj_1k",
+        "ukw_1k",
+        "clw_10k",
+        "serve_pallas",
+    }
+    for name in ("lvj_1k", "ukw_1k", "clw_10k"):
         p = solver_preset(name)
         assert isinstance(p, SolverConfig)
         assert p.backend == "mesh1d"
     assert solver_preset("clw_10k").pair_chunks > 1  # §V-F chunked Allreduce
+    fast = solver_preset("serve_pallas")  # the kernel fast path preset
+    assert (fast.backend, fast.mode) == ("batch", "pallas")
     with pytest.raises(KeyError, match="no solver preset"):
         solver_preset("nope")
