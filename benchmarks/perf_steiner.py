@@ -9,7 +9,12 @@ Two benches:
     prepared :class:`repro.solver.SteinerSolver` handle, plus the
     one-time ``prepare()`` cost (ELL build for frontier/pallas; the
     pallas row is the kernel path — compiled on TPU/GPU, interpreter
-    fallback on CPU).  Writes
+    fallback on CPU).  Two additional rows run the mesh1d backend on a
+    (1, 1) mesh — ``mesh_bucket`` vs ``mesh_frontier`` — recording the
+    paper's Fig. 5/6 messages/relaxations counters so the distributed
+    message-prioritization work reduction is tracked alongside the
+    latencies (the bench asserts frontier does strictly fewer messages
+    and lands on the bit-identical total).  Writes
     ``BENCH_steiner.json`` at the repo root (same shape as
     ``BENCH_serve.json``) so the perf trajectory covers the core
     pipeline, not just serving.
@@ -93,9 +98,11 @@ def run_handle_bench(args) -> None:
         for q in range(args.queries)
     ]
 
-    mode_rows = {}
-    for mode in MODES:
-        cfg = SolverConfig(backend="single", mode=mode)
+    def bench_row(name, cfg, mesh_stats=False):
+        """One prepare → cold solve → warm-loop measurement (shared by
+        the single-backend and mesh rows so every BENCH row is measured
+        identically).  ``mesh_stats`` adds the paper's Fig. 5/6
+        messages/relaxations counters from the distributed result."""
         t0 = time.perf_counter()
         handle = SteinerSolver(cfg).prepare(g)
         t_prepare = time.perf_counter() - t0
@@ -122,15 +129,51 @@ def run_handle_bench(args) -> None:
             "retraces_after_cold": int(retraces),
             "total_distance_q0": float(first.total_distance),
         }
-        mode_rows[mode] = row
+        extra = ""
+        if mesh_stats:
+            raw = first.raw
+            row["iterations_q0"] = int(raw.iterations)
+            row["relaxations_q0"] = float(raw.relaxations)
+            row["messages_q0"] = float(raw.messages)
+            extra = (
+                f"messages={row['messages_q0']:.3e} "
+                f"relaxations={row['relaxations_q0']:.3e} "
+            )
         print(
-            f"mode={mode:8s} prepare={row['prepare_s']:7.3f}s "
+            f"mode={name:13s} prepare={row['prepare_s']:7.3f}s "
             f"cold={row['cold_solve_s']:6.3f}s "
             f"warm_p50={row['warm_p50_ms']:7.2f}ms "
             f"cold/warm={row['cold_over_warm']:6.1f}x "
-            f"retraces={retraces}",
+            f"{extra}retraces={retraces}",
             flush=True,
         )
+        return row
+
+    mode_rows = {}
+    for mode in MODES:
+        mode_rows[mode] = bench_row(mode, SolverConfig(backend="single", mode=mode))
+
+    # --- mesh1d rows: the distributed schedules on a (1, 1) mesh, with
+    # the messages/relaxations counters (paper Fig. 5/6 work metrics)
+    mesh_specs = {
+        "mesh_bucket": SolverConfig(
+            backend="mesh1d", mode="bucket", mesh_shape=(1, 1)
+        ),
+        "mesh_frontier": SolverConfig(
+            backend="mesh1d", mode="frontier", mesh_shape=(1, 1),
+            ell_width=32, frontier_size=256,
+        ),
+    }
+    for name, cfg in mesh_specs.items():
+        mode_rows[name] = bench_row(name, cfg, mesh_stats=True)
+    # the acceptance contract: identical tree, strictly less message work
+    fr, bk = mode_rows["mesh_frontier"], mode_rows["mesh_bucket"]
+    assert fr["total_distance_q0"] == bk["total_distance_q0"], (fr, bk)
+    assert fr["messages_q0"] < bk["messages_q0"], (fr, bk)
+    print(
+        f"mesh frontier/bucket message ratio: "
+        f"{fr['messages_q0'] / bk['messages_q0']:.3f}"
+    )
 
     import jax
 
@@ -142,7 +185,7 @@ def run_handle_bench(args) -> None:
             "n_directed_edges": int(m),
             "num_seeds": args.num_seeds,
             "queries": args.queries,
-            "backend": "single",
+            "backend": "single + mesh1d(1,1)",
             "seed": rng_seed,
         },
         "env": {

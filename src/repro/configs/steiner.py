@@ -51,6 +51,14 @@ SOLVER_PRESETS = {
         ell_width=32,
         block_rows=256,
     ),
+    # Distributed message prioritization (paper §IV): per-block top-K
+    # dirty-row selection over the sharded ELL view — O(K·k) segment-min
+    # work per device per round instead of O(E_shard).  K=8192 rows ×
+    # k=32 keeps each round's relax slab (~256K candidates/device) well
+    # under the collective terms that bound the roofline.
+    "mesh_frontier": _BASE.replace(
+        mode="frontier", ell_width=32, frontier_size=8192
+    ),
 }
 
 

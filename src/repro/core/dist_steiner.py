@@ -14,7 +14,11 @@ Mapping the paper's MPI design onto XLA SPMD (see DESIGN.md §Adaptation):
                                             global exchange (stale reads are
                                             safe — distances only decrease)
   priority message queue                    Δ-bucketed thresholding (only
-                                            low-distance sources may send)
+                                            low-distance sources may send),
+                                            or mode="frontier": per-block
+                                            top-K dirty-row selection over a
+                                            sharded ELL view (work per round
+                                            O(K·k)/device instead of O(Eb))
   MPI_Allreduce(MPI_MIN) on E_N distances   lax.pmin on the S² pair table
   Allreduce(MIN) on endpoint vertex ids     two more lexicographic pmin passes
   replicated sequential MST (Boost Prim)    replicated dense Prim / Borůvka
@@ -142,6 +146,122 @@ def partition_edges(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class EllPartition:
+    """Host-side 1D-sharded ELL view (numpy; device placement by caller).
+
+    ELL rows (source-major padded adjacency, see
+    :class:`repro.core.graph.EllGraph`) are bucketed by the vertex block
+    owning their *source* vertex and dealt round-robin across replicas
+    within the block, mirroring :class:`Partition`'s edge layout.  Flat
+    arrays have leading length ``n_replica * n_blocks * rb`` laid out
+    replica-major so ``P((*replica_axes, vert_axis))`` puts bucket
+    ``(r, b)`` on replica r / vertex-column b.  Padding rows alias the
+    block base vertex (``b * nb``) with all-``+inf`` weights — they can
+    never be selected into a frontier (no finite edges).
+    """
+
+    nbr: np.ndarray  # (n_replica * n_blocks * rb, k) int32 neighbor ids
+    wgt: np.ndarray  # (n_replica * n_blocks * rb, k) f32; +inf padding
+    row2v: np.ndarray  # (n_replica * n_blocks * rb,) int32 owning vertex
+    n: int  # true vertex count
+    nb: int  # vertex block size (padded)
+    rb: int  # ELL rows per device (padded)
+    k: int  # ELL row width
+    n_blocks: int
+    n_replica: int
+
+    @property
+    def npad(self) -> int:
+        return self.nb * self.n_blocks
+
+    @classmethod
+    def from_buckets(cls, nbr, wgt, row2v, *, n: int, nb: int):
+        """Flattens filled (R, B, rb[, k]) bucket arrays (see
+        :func:`ell_bucket_arrays`) into the device layout."""
+        R, B, rb, k = nbr.shape
+        return cls(
+            nbr=nbr.reshape(-1, k),
+            wgt=wgt.reshape(-1, k),
+            row2v=row2v.reshape(-1),
+            n=n,
+            nb=nb,
+            rb=rb,
+            k=k,
+            n_blocks=B,
+            n_replica=R,
+        )
+
+
+def ell_bucket_arrays(counts: np.ndarray, k: int, nb: int, block_multiple: int = 8):
+    """Allocates the padded per-bucket ELL arrays, plus ``rb``.
+
+    The single source of the shard geometry — ``rb`` rounding, ``+inf``
+    weight padding, padding rows aliasing the block base vertex — shared
+    by :func:`partition_ell` and the disk loader
+    (:func:`repro.graphstore.partition.load_partition_ell`), whose
+    outputs must agree bit for bit.
+    """
+    R, B = counts.shape
+    rb = max(1, int(counts.max()))
+    rb = -(-rb // block_multiple) * block_multiple
+    nbr = np.zeros((R, B, rb, k), np.int32)
+    wgt = np.full((R, B, rb, k), np.inf, np.float32)
+    row2v = np.zeros((R, B, rb), np.int32)
+    for b in range(B):
+        row2v[:, b, :] = b * nb  # padding rows alias the block base
+    return nbr, wgt, row2v, rb
+
+
+def partition_ell(
+    ell,
+    *,
+    n_replica: int,
+    n_blocks: int,
+    block_multiple: int = 8,
+) -> EllPartition:
+    """Shards a global ELL view by source vertex block (1D layout).
+
+    Every ELL row goes to the vertex column owning its source block
+    (``row2v // nb``); rows within a block are dealt round-robin across
+    replicas in global row order, so the shard contents are identical to
+    what :func:`repro.graphstore.partition.partition_ell_store` streams
+    to disk from the same CSR (bit-for-bit, asserted in tests).
+    """
+    nbr = np.asarray(ell.nbr)
+    wgt = np.asarray(ell.wgt)
+    row2v = np.asarray(ell.row2v, np.int64)
+    n = ell.n
+    k = nbr.shape[1]
+    nb = -(-n // n_blocks)
+    nb = -(-nb // block_multiple) * block_multiple
+    blk = row2v // nb
+    # within-block rank in global row order → round-robin replica
+    order = np.argsort(blk, kind="stable")
+    bs = blk[order]
+    run_start = np.r_[0, np.flatnonzero(bs[1:] != bs[:-1]) + 1]
+    run_len = np.diff(np.r_[run_start, bs.shape[0]])
+    within = np.empty(blk.shape[0], np.int64)
+    within[order] = np.arange(bs.shape[0]) - np.repeat(run_start, run_len)
+    rep = within % n_replica
+    counts = np.zeros((n_replica, n_blocks), np.int64)
+    np.add.at(counts, (rep, blk), 1)
+    onbr, owgt, orow, _ = ell_bucket_arrays(counts, k, nb, block_multiple)
+    bucket_key = rep * n_blocks + blk
+    korder = np.argsort(bucket_key, kind="stable")  # ascending row order
+    kk = bucket_key[korder]
+    uniq, starts = np.unique(kk, return_index=True)
+    ends = np.r_[starts[1:], len(kk)]
+    for u, s0, s1 in zip(uniq, starts, ends):
+        r, b = divmod(int(u), n_blocks)
+        rows = korder[s0:s1]
+        c = len(rows)
+        onbr[r, b, :c] = nbr[rows]
+        owgt[r, b, :c] = wgt[rows]
+        orow[r, b, :c] = row2v[rows]
+    return EllPartition.from_buckets(onbr, owgt, orow, n=n, nb=nb)
+
+
 # ----------------------------------------------------------------------------
 # shard_map pipeline
 # ----------------------------------------------------------------------------
@@ -149,12 +269,19 @@ def partition_edges(
 
 @dataclasses.dataclass(frozen=True)
 class DistSteinerConfig:
-    """Static configuration of the distributed pipeline."""
+    """Static configuration of the distributed pipeline.
+
+    Wire-format knobs are validated here, eagerly, instead of inside the
+    traced pipeline: ``lab_i16`` gathers labels as int16, which holds
+    every label value in [0, S] only while ``S < 32768``; ``fuse_gather``
+    rides labels on an f32 all-gather, exact only while ``S < 2**24`` —
+    beyond that the packing would *silently* corrupt cell ownership.
+    """
 
     n: int
     nb: int
     num_seeds: int
-    mode: str = "bucket"  # "dense" | "bucket"
+    mode: str = "bucket"  # "dense" | "bucket" | "frontier"
     mst_algo: str = "prim"  # "prim" | "boruvka"
     local_steps: int = 1  # >1: async-style collective amortization
     pair_chunks: int = 1  # paper §V-F chunked Allreduce on the S² table
@@ -162,6 +289,35 @@ class DistSteinerConfig:
     delta: Optional[float] = None
     fuse_gather: bool = True  # single fused (dist, lab) all-gather
     lab_i16: bool = False  # gather labels as int16 (S < 32768): 6B/vertex
+    frontier_size: int = 1024  # top-K dirty rows per device (mode="frontier")
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("dense", "bucket", "frontier"):
+            raise ValueError(
+                f"unknown mode: {self.mode!r} "
+                f"(use 'dense' | 'bucket' | 'frontier')"
+            )
+        if self.lab_i16 and self.num_seeds >= 32768:
+            raise ValueError(
+                f"lab_i16 gathers labels as int16, which requires "
+                f"|S| < 32768; got num_seeds={self.num_seeds}"
+            )
+        if self.fuse_gather and not self.lab_i16 and self.num_seeds >= 2**24:
+            raise ValueError(
+                f"fuse_gather packs labels into an f32 all-gather, exact "
+                f"only for |S| < 2**24; got num_seeds={self.num_seeds} — "
+                f"use fuse_gather=False (or lab_i16 for |S| < 32768)"
+            )
+        if self.mode == "frontier" and self.local_steps != 1:
+            raise ValueError(
+                f"local_steps > 1 is not supported with mode='frontier' "
+                f"(the top-K candidates must cross devices every round); "
+                f"got local_steps={self.local_steps}"
+            )
+        if self.frontier_size < 1:
+            raise ValueError(
+                f"frontier_size must be >= 1, got {self.frontier_size}"
+            )
 
 
 def _spec(*names):
@@ -179,9 +335,12 @@ def make_dist_steiner(
 ):
     """Builds the jitted distributed Steiner pipeline for ``mesh``.
 
-    Returns ``fn(src, dst, w, seeds) -> (dist, lab, pred, marked, path_edge,
-    bridge (bu, bv, bw, bvalid), total, num_edges, stats)`` where the edge
-    arrays follow the :class:`Partition` layout.
+    For ``mode="dense"``/``"bucket"`` returns ``fn(src, dst, w, seeds) ->
+    (dist, lab, pred, marked, path_edge, bridge (bu, bv, bw, bvalid),
+    total, num_edges, stats)`` where the edge arrays follow the
+    :class:`Partition` layout.  For ``mode="frontier"`` the signature is
+    ``fn(nbr, wgt, row2v, seeds)`` over the :class:`EllPartition` layout
+    (same 9-part output).
     """
     from jax.sharding import NamedSharding
 
@@ -191,7 +350,10 @@ def make_dist_steiner(
     nb = cfg.nb
     n_blocks = mesh.shape[vert_axis]
     npad = nb * n_blocks
-    cap = cfg.max_iters if cfg.max_iters is not None else 4 * cfg.n + 64
+    # frontier advances ≤ K rows/device/round: allow proportionally more
+    # rounds before the safety cap (matching voronoi_cells_frontier)
+    default_cap = (16 if cfg.mode == "frontier" else 4) * cfg.n + 64
+    cap = cfg.max_iters if cfg.max_iters is not None else default_cap
     cap = min(cap, 2**31 - 2)  # int32 loop counter at billion-vertex scale
 
     def gather_state(dist_l, lab_l):
@@ -200,10 +362,10 @@ def make_dist_steiner(
         ``fuse_gather`` packs (dist, lab) into one f32 collective — labels
         are exact in f32 for S < 2^24 (paper max |S| = 10K).
         ``lab_i16`` instead gathers labels as int16 (valid for S < 32768):
-        6 instead of 8 wire bytes per vertex per round.
+        6 instead of 8 wire bytes per vertex per round.  Both bounds are
+        enforced eagerly by :class:`DistSteinerConfig` validation.
         """
         if cfg.lab_i16:
-            assert S < 32767, S
             distf = jax.lax.all_gather(dist_l, vert_axis, tiled=True)
             lab16 = jax.lax.all_gather(
                 lab_l.astype(jnp.int16), vert_axis, tiled=True
@@ -217,6 +379,118 @@ def make_dist_steiner(
         labf = jax.lax.all_gather(lab_l, vert_axis, tiled=True)
         return distf, labf
 
+    def init_block(seeds, off):
+        """Paper Alg. 3 INITIALIZATION for my (nb,) block slice.
+
+        Scatters use ``min`` so duplicate seed entries are inert: a
+        vertex listed at several seed indices is owned by the lowest
+        index, matching :func:`repro.core.voronoi.init_state` (the serve
+        planner's pad-with-duplicates contract).
+        """
+        sidx = jnp.arange(S, dtype=jnp.int32)
+        inblk = (seeds >= off) & (seeds < off + nb)
+        tgt = jnp.where(inblk, seeds - off, nb)
+        dist_l = jnp.full((nb + 1,), INF, jnp.float32).at[tgt].min(0.0)[:nb]
+        lab_l = jnp.full((nb + 1,), S, jnp.int32).at[tgt].min(sidx)[:nb]
+        return dist_l, lab_l
+
+    def chunk_pmin(x, fill):
+        if cfg.pair_chunks <= 1:
+            return jax.lax.pmin(x, all_axes)
+        csz = -(-(S * S) // cfg.pair_chunks)
+        pad = csz * cfg.pair_chunks - S * S
+        xp = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+        xp = xp.reshape(cfg.pair_chunks, csz)
+
+        def cbody(i, acc):
+            return acc.at[i].set(jax.lax.pmin(xp[i], all_axes))
+
+        out = jax.lax.fori_loop(0, cfg.pair_chunks, cbody, jnp.zeros_like(xp))
+        return out.reshape(-1)[: S * S]
+
+    def finish(dist_l, lab_l, pred_l, esrc, edst, ew, off, gids, iters, rlx, msg):
+        """Stages 2-6 after Voronoi convergence (shared by every mode):
+        pair tables → Allreduce(MIN) → replicated MST → bridge pruning →
+        pred-walk marking.  ``(esrc, edst, ew)`` is my shard's directed
+        edge slice in GLOBAL ids (+inf weights are inert)."""
+        # ---- MIN distance edges → G'1 (paper Alg. 5) + Allreduce(MIN)
+        distf, labf = gather_state(dist_l, lab_l)
+        dm_l, um_l, vm_l = local_pair_tables(
+            esrc, edst, ew, distf[esrc], distf[edst], labf[esrc], labf[edst], S
+        )
+        dmat = chunk_pmin(dm_l, INF)
+        um_c = jnp.where(dm_l == dmat, um_l, IMAX)
+        umat = chunk_pmin(um_c, IMAX)
+        vm_c = jnp.where((dm_l == dmat) & (um_l == umat), vm_l, IMAX)
+        vmat = chunk_pmin(vm_c, IMAX)
+
+        # ---- replicated MST (paper Alg. 3 line 17)
+        wmat = dmat.reshape(S, S)
+        wmat = jnp.minimum(wmat, wmat.T)
+        wmat = jnp.where(jnp.eye(S, dtype=bool), INF, wmat)
+        parent = (
+            prim_dense(wmat) if cfg.mst_algo == "prim" else boruvka_dense(wmat)
+        )
+
+        # ---- bridge pruning + TREE_EDGE (paper Alg. 6), pointer doubling
+        bu, bv, bw, bvalid = bridge_endpoints(dmat, umat, vmat, distf, parent, S)
+        predf = jax.lax.all_gather(pred_l, vert_axis, tiled=True)  # (npad,)
+        ep_tgt_u = jnp.where(bvalid & (bu >= off) & (bu < off + nb), bu - off, nb)
+        ep_tgt_v = jnp.where(bvalid & (bv >= off) & (bv < off + nb), bv - off, nb)
+        marked_l = (
+            jnp.zeros((nb + 1,), jnp.bool_)
+            .at[ep_tgt_u]
+            .set(True)
+            .at[ep_tgt_v]
+            .set(True)[:nb]
+        )
+
+        def mbody(carry):
+            marked_l, ptr, _ = carry
+            markedf = jax.lax.all_gather(marked_l, vert_axis, tiled=True)
+            t = ptr - off
+            inb = (t >= 0) & (t < nb)
+            hit = (
+                jax.ops.segment_max(
+                    jnp.where(inb, markedf.astype(jnp.int32), 0),
+                    jnp.clip(t, 0, nb - 1),
+                    nb,
+                )
+                > 0
+            )
+            new = marked_l | hit
+            ch = jax.lax.pmax(
+                jnp.any(new != marked_l).astype(jnp.int32), all_axes
+            )
+            return new, ptr[ptr], ch > 0
+
+        marked_l, _, _ = jax.lax.while_loop(
+            lambda c: c[2], mbody, (marked_l, predf, jnp.bool_(True))
+        )
+
+        path_edge_l = marked_l & (pred_l != gids)
+        path_w = jnp.where(path_edge_l, dist_l - distf[pred_l], 0.0)
+        total = jax.lax.psum(jnp.sum(path_w), (vert_axis,)) + jnp.sum(bw)
+        nedges = jax.lax.psum(
+            jnp.sum(path_edge_l).astype(jnp.int32), (vert_axis,)
+        ) + jnp.sum(bvalid).astype(jnp.int32)
+
+        stats = jnp.stack([iters.astype(jnp.float32), rlx, msg])
+        return (
+            dist_l,
+            lab_l,
+            pred_l,
+            marked_l,
+            path_edge_l,
+            bu,
+            bv,
+            bw,
+            bvalid,
+            total,
+            nedges,
+            stats,
+        )
+
     def body(src, dst, w, seeds):
         my_blk = jax.lax.axis_index(vert_axis)
         off = my_blk * nb
@@ -224,11 +498,7 @@ def make_dist_steiner(
         ldst = dst - off  # partitioner guarantees dst ∈ my block
 
         # ---- INITIALIZATION (paper Alg. 3 lines 1-9)
-        sidx = jnp.arange(S, dtype=jnp.int32)
-        inblk = (seeds >= off) & (seeds < off + nb)
-        tgt = jnp.where(inblk, seeds - off, nb)
-        dist_l = jnp.full((nb + 1,), INF, jnp.float32).at[tgt].set(0.0)[:nb]
-        lab_l = jnp.full((nb + 1,), S, jnp.int32).at[tgt].set(sidx)[:nb]
+        dist_l, lab_l = init_block(seeds, off)
         pred_l = gids
 
         if cfg.mode == "bucket":
@@ -340,96 +610,124 @@ def make_dist_steiner(
             ),
         )
 
-        # ---- MIN distance edges → G'1 (paper Alg. 5) + Allreduce(MIN)
-        distf, labf = gather_state(dist_l, lab_l)
-        dm_l, um_l, vm_l = local_pair_tables(
-            src, dst, w, distf[src], distf[dst], labf[src], labf[dst], S
+        return finish(
+            dist_l, lab_l, pred_l, src, dst, w, off, gids, iters, rlx, msg
         )
 
-        def chunk_pmin(x, fill):
-            if cfg.pair_chunks <= 1:
-                return jax.lax.pmin(x, all_axes)
-            csz = -(-(S * S) // cfg.pair_chunks)
-            pad = csz * cfg.pair_chunks - S * S
-            xp = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
-            xp = xp.reshape(cfg.pair_chunks, csz)
+    def frontier_body(nbr, wgt, row2v, seeds):
+        """Paper §IV message prioritization over the sharded ELL view.
 
-            def cbody(i, acc):
-                return acc.at[i].set(jax.lax.pmin(xp[i], all_axes))
+        Each device keeps a per-row *dirty* flag and, every round, selects
+        its top-K lowest-distance dirty rows — the distributed analogue of
+        the paper's priority message queue (one best-effort queue per
+        rank) — relaxing only those rows' O(K·k) edges instead of the full
+        O(Eb) shard.  Candidates are delivered to their (possibly remote)
+        destination block by the same lexicographic pmin merge the
+        dense/bucket paths use for replica divergence, here extended over
+        the vertex axis; convergence lands on the identical (dist, lab,
+        pred) fixpoint, so the tree is bit-identical to dense/bucket.
+        """
+        my_blk = jax.lax.axis_index(vert_axis)
+        off = my_blk * nb
+        gids = jnp.arange(nb, dtype=jnp.int32) + off
+        dist_l, lab_l = init_block(seeds, off)
+        pred_l = gids
 
-            out = jax.lax.fori_loop(0, cfg.pair_chunks, cbody, jnp.zeros_like(xp))
-            return out.reshape(-1)[: S * S]
+        rb = nbr.shape[0]
+        K = min(cfg.frontier_size, rb)  # top_k cap on small shards
+        # local vertex of each of my rows (row sources live in my block;
+        # padding rows alias the block base → local 0)
+        lrow = jnp.clip(row2v - off, 0, nb - 1)
+        # rows with no finite edge (ELL padding, degree-0 vertices) can
+        # never produce a message: permanently ineligible for the queue
+        has_edges = jnp.any(jnp.isfinite(wgt), axis=1)
+        dirty0 = jnp.isin(row2v, seeds) & has_edges
 
-        dmat = chunk_pmin(dm_l, INF)
-        um_c = jnp.where(dm_l == dmat, um_l, IMAX)
-        umat = chunk_pmin(um_c, IMAX)
-        vm_c = jnp.where((dm_l == dmat) & (um_l == umat), vm_l, IMAX)
-        vmat = chunk_pmin(vm_c, IMAX)
-
-        # ---- replicated MST (paper Alg. 3 line 17)
-        wmat = dmat.reshape(S, S)
-        wmat = jnp.minimum(wmat, wmat.T)
-        wmat = jnp.where(jnp.eye(S, dtype=bool), INF, wmat)
-        parent = prim_dense(wmat) if cfg.mst_algo == "prim" else boruvka_dense(wmat)
-
-        # ---- bridge pruning + TREE_EDGE (paper Alg. 6), pointer doubling
-        bu, bv, bw, bvalid = bridge_endpoints(dmat, umat, vmat, distf, parent, S)
-        predf = jax.lax.all_gather(pred_l, vert_axis, tiled=True)  # (npad,)
-        ep_tgt_u = jnp.where(bvalid & (bu >= off) & (bu < off + nb), bu - off, nb)
-        ep_tgt_v = jnp.where(bvalid & (bv >= off) & (bv < off + nb), bv - off, nb)
-        marked_l = (
-            jnp.zeros((nb + 1,), jnp.bool_)
-            .at[ep_tgt_u]
-            .set(True)
-            .at[ep_tgt_v]
-            .set(True)[:nb]
-        )
-
-        def mbody(carry):
-            marked_l, ptr, _ = carry
-            markedf = jax.lax.all_gather(marked_l, vert_axis, tiled=True)
-            t = ptr - off
-            inb = (t >= 0) & (t < nb)
-            hit = (
-                jax.ops.segment_max(
-                    jnp.where(inb, markedf.astype(jnp.int32), 0),
-                    jnp.clip(t, 0, nb - 1),
-                    nb,
-                )
-                > 0
+        def vbody(carry):
+            dist_l, lab_l, pred_l, dirty, it, rlx, msg, _ = carry
+            # --- the priority queue: top-K lowest-distance dirty rows
+            rowdist = jnp.where(dirty, dist_l[lrow], INF)
+            _, rows = jax.lax.top_k(-rowdist, K)
+            sel_ok = jnp.isfinite(rowdist[rows])
+            dirty = dirty.at[rows].set(dirty[rows] & ~sel_ok)
+            # --- relax only the selected rows' edges
+            lsel = lrow[rows]
+            rwgt = jnp.where(sel_ok[:, None], wgt[rows], INF)
+            cand = dist_l[lsel][:, None] + rwgt  # (K, k)
+            labc = jnp.where(sel_ok, lab_l[lsel], IMAX)
+            srcc = jnp.where(sel_ok, row2v[rows], IMAX)
+            flat_dst = nbr[rows].reshape(-1)  # GLOBAL destination ids
+            flat_cand = cand.reshape(-1)
+            flat_lab = jnp.broadcast_to(labc[:, None], cand.shape).reshape(-1)
+            flat_src = jnp.broadcast_to(srcc[:, None], cand.shape).reshape(-1)
+            # local 3-pass lexicographic segmin over the FULL vertex range
+            m = jax.ops.segment_min(flat_cand, flat_dst, npad)
+            e1 = flat_cand == m[flat_dst]
+            ml = jax.ops.segment_min(
+                jnp.where(e1, flat_lab, IMAX), flat_dst, npad
             )
-            new = marked_l | hit
-            ch = jax.lax.pmax(
-                jnp.any(new != marked_l).astype(jnp.int32), all_axes
+            e2 = e1 & (flat_lab == ml[flat_dst])
+            ms = jax.ops.segment_min(
+                jnp.where(e2, flat_src, IMAX), flat_dst, npad
             )
-            return new, ptr[ptr], ch > 0
+            # --- deliver to the owning blocks: lexicographic pmin over
+            # replicas AND blocks, then my (nb,) slice of the result
+            m_g = jax.lax.pmin(m, all_axes)
+            ml_g = jax.lax.pmin(jnp.where(m == m_g, ml, IMAX), all_axes)
+            ms_g = jax.lax.pmin(
+                jnp.where((m == m_g) & (ml == ml_g), ms, IMAX), all_axes
+            )
+            m_s = jax.lax.dynamic_slice_in_dim(m_g, off, nb)
+            ml_s = jax.lax.dynamic_slice_in_dim(ml_g, off, nb)
+            ms_s = jax.lax.dynamic_slice_in_dim(ms_g, off, nb)
+            upd = jnp.isfinite(m_s) & (
+                (m_s < dist_l)
+                | ((m_s == dist_l) & (ml_s < lab_l))
+                | ((m_s == dist_l) & (ml_s == lab_l) & (ms_s < pred_l))
+            )
+            dist_l = jnp.where(upd, m_s, dist_l)
+            lab_l = jnp.where(upd, ml_s, lab_l)
+            pred_l = jnp.where(upd, ms_s, pred_l)
+            # rows of updated vertices become dirty again (their replicas
+            # compute the same upd, so every shard of v's rows agrees)
+            dirty = dirty | (upd[lrow] & has_edges)
+            imp = jax.lax.psum(jnp.sum(upd).astype(jnp.float32), (vert_axis,))
+            att = jnp.sum(jnp.isfinite(flat_cand)).astype(jnp.float32)
+            msg_g = jax.lax.psum(att, all_axes)
+            work = jax.lax.pmax(jnp.any(dirty).astype(jnp.int32), all_axes) > 0
+            return (
+                dist_l, lab_l, pred_l, dirty, it + 1, rlx + imp, msg + msg_g,
+                work,
+            )
 
-        marked_l, _, _ = jax.lax.while_loop(
-            lambda c: c[2], mbody, (marked_l, predf, jnp.bool_(True))
+        def vcond(carry):
+            *_, it, _, _, work = carry
+            return work & (it < cap)
+
+        dist_l, lab_l, pred_l, _, iters, rlx, msg, _ = jax.lax.while_loop(
+            vcond,
+            vbody,
+            (
+                dist_l,
+                lab_l,
+                pred_l,
+                dirty0,
+                jnp.int32(0),
+                jnp.float32(0.0),
+                jnp.float32(0.0),
+                jnp.bool_(True),
+            ),
+        )
+        # my shard's directed edges, flattened from the ELL rows (padding
+        # lanes carry +inf weight — inert through the pair tables)
+        esrc = jnp.broadcast_to(row2v[:, None], nbr.shape).reshape(-1)
+        return finish(
+            dist_l, lab_l, pred_l, esrc, nbr.reshape(-1), wgt.reshape(-1),
+            off, gids, iters, rlx, msg,
         )
 
-        path_edge_l = marked_l & (pred_l != gids)
-        path_w = jnp.where(path_edge_l, dist_l - distf[pred_l], 0.0)
-        total = jax.lax.psum(jnp.sum(path_w), (vert_axis,)) + jnp.sum(bw)
-        nedges = jax.lax.psum(
-            jnp.sum(path_edge_l).astype(jnp.int32), (vert_axis,)
-        ) + jnp.sum(bvalid).astype(jnp.int32)
-
-        stats = jnp.stack([iters.astype(jnp.float32), rlx, msg])
-        return (
-            dist_l,
-            lab_l,
-            pred_l,
-            marked_l,
-            path_edge_l,
-            bu,
-            bv,
-            bw,
-            bvalid,
-            total,
-            nedges,
-            stats,
-        )
+    if cfg.mode == "frontier":
+        body = frontier_body
 
     P = _spec
     edge_spec = P((*replica_axes, vert_axis))

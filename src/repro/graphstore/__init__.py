@@ -37,6 +37,8 @@ from repro.graphstore.partition import (
     hub_sort_store,
     load_partition,
     load_partition_2d,
+    load_partition_ell,
+    partition_ell_store,
     partition_store,
     partition_store_2d,
 )
@@ -57,6 +59,8 @@ __all__ = [
     "hub_sort_store",
     "load_partition",
     "load_partition_2d",
+    "load_partition_ell",
+    "partition_ell_store",
     "partition_store",
     "partition_store_2d",
 ]

@@ -11,9 +11,10 @@ Examples::
 
     python -m repro.graphstore info g14.gstore
 
-    # shards for a (1 replica × 4 vertex-block) mesh
+    # shards for a (1 replica × 4 vertex-block) mesh; --ell-width also
+    # writes the mesh-frontier ELL shards (row width 32)
     python -m repro.graphstore partition g14.gstore --scheme 1d \\
-        --replicas 1 --blocks 4
+        --replicas 1 --blocks 4 --ell-width 32
 """
 
 from __future__ import annotations
@@ -95,7 +96,12 @@ def _cmd_info(args) -> int:
 
 
 def _cmd_partition(args) -> int:
-    from repro.graphstore import open_store, partition_store, partition_store_2d
+    from repro.graphstore import (
+        open_store,
+        partition_ell_store,
+        partition_store,
+        partition_store_2d,
+    )
 
     store = open_store(args.store, verify=False)
     if args.scheme == "1d":
@@ -103,6 +109,9 @@ def _cmd_partition(args) -> int:
             store, n_replica=args.replicas, n_blocks=args.blocks
         )
     else:
+        if args.ell_width is not None:
+            print("--ell-width requires --scheme 1d", file=sys.stderr)
+            return 2
         meta = partition_store_2d(store, R=args.rows, C=args.cols)
     counts = np.asarray(meta["counts"])
     print(
@@ -110,6 +119,13 @@ def _cmd_partition(args) -> int:
         f"{counts.size} shards, edges/shard min={counts.min():,} "
         f"max={counts.max():,}"
     )
+    if args.scheme == "1d" and args.ell_width is not None:
+        ell = partition_ell_store(store, k=args.ell_width)
+        ec = np.asarray(ell["counts"])
+        print(
+            f"ELL shards [k={ell['k']}]: rows/shard min={ec.min():,} "
+            f"max={ec.max():,} (mesh frontier mode loads these off disk)"
+        )
     return 0
 
 
@@ -149,6 +165,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--blocks", type=int, default=4, help="1d: vertex blocks")
     p.add_argument("--rows", type=int, default=2, help="2d: src-block rows")
     p.add_argument("--cols", type=int, default=2, help="2d: dst-block cols")
+    p.add_argument(
+        "--ell-width", type=int, default=None, metavar="K",
+        help="1d: also write source-block ELL shards of row width K "
+             "(the mesh frontier mode's on-disk priority-queue layout)",
+    )
     p.set_defaults(fn=_cmd_partition)
 
     args = ap.parse_args(argv)

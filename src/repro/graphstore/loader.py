@@ -9,9 +9,10 @@ arrays stay on disk until touched.  From it you can get
                         (vectorized; never routes through the COO
                         expansion or the O(n)-Python ``to_ell`` loop);
 * ``iter_coo(...)``   — bounded-memory chunks of the directed edge list;
-* ``load_partition()``/``load_partition_2d()`` — per-shard loads of a
-  partitioned store, rebuilt into the exact ``Partition``/``Partition2D``
-  layouts the mesh backends execute.
+* ``load_partition()``/``load_partition_2d()``/``load_partition_ell()``
+  — per-shard loads of a partitioned store, rebuilt into the exact
+  ``Partition``/``Partition2D``/``EllPartition`` layouts the mesh
+  backends execute.
 
 Checksums are verified at open by default (``verify=False`` skips — e.g.
 reopening a store this process just wrote).
@@ -195,6 +196,13 @@ class GraphStore:
         from repro.graphstore.partition import load_partition_2d
 
         return load_partition_2d(self)
+
+    def load_partition_ell(self):
+        """Rebuilds the stored 1D ELL partition — the sharded priority-
+        queue layout of the mesh frontier mode (see ``partition.py``)."""
+        from repro.graphstore.partition import load_partition_ell
+
+        return load_partition_ell(self)
 
     def __repr__(self) -> str:
         part = self.partition_meta

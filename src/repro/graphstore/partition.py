@@ -17,6 +17,16 @@ what the in-memory partitioners produce on the same edge sequence, and
 files hold *global* vertex ids; localization to block-relative
 coordinates happens at load, keeping the on-disk shards scheme-agnostic.
 
+The 1D scheme additionally supports **ELL shards**
+(:func:`partition_ell_store`): the split-row ELLPACK view bucketed by
+*source* vertex block, persisted next to the edge shards so the mesh
+frontier mode (``SolverConfig(backend="mesh1d", mode="frontier")``)
+loads its per-device priority-queue layout straight off disk —
+``load_partition_ell`` rebuilds the exact padded
+:class:`~repro.core.dist_steiner.EllPartition` without ever expanding
+the edge list on the host.  Re-partitioning (either scheme) drops the
+ELL shards: their geometry is derived from the 1D meta.
+
 Hub-sort (:func:`hub_sort_store`) writes a new store whose vertex ids
 are ranked by descending degree — the analogue of HavoqGT's hub
 delegation, concentrating high-degree rows in the leading blocks — with
@@ -60,36 +70,50 @@ def _append_shard(shdir: Path, stem: str,
             h.write(np.ascontiguousarray(arr, dtype=dtype).tobytes())
 
 
+def _drop_manifest_arrays(manifest: dict, prefixes) -> None:
+    """Removes stale shard rows — their files were removed by
+    ``_clean_shards``, and stale manifest rows would make every later
+    ``open_store`` fail checksum verification on missing files."""
+    for prefix in prefixes:
+        for name in [k for k in manifest["arrays"] if k.startswith(prefix)]:
+            del manifest["arrays"][name]
+
+
+def _add_shard_array(
+    store: GraphStore, stem: str, field: str, dtype, shape
+) -> None:
+    rel = f"shards/{stem}_{field}.bin"
+    store.manifest["arrays"][f"shard_{stem}_{field}"] = {
+        "file": rel,
+        "dtype": np.dtype(dtype).newbyteorder("<").str,
+        "shape": [int(s) for s in shape],
+        "crc32": fmt.crc32_file(store.path / rel),
+    }
+
+
+def _write_manifest(store: GraphStore) -> None:
+    """Atomically rewrites the store manifest (tmp write + replace)."""
+    tmp = store.path / (fmt.MANIFEST_NAME + ".tmp")
+    tmp.write_text(json.dumps(store.manifest, indent=1, sort_keys=True))
+    tmp.replace(store.path / fmt.MANIFEST_NAME)
+
+
 def _register_shards(
     store: GraphStore, scheme: str, counts: np.ndarray, part_meta: dict
 ) -> None:
-    """Adds shard arrays + the partition block to the store manifest.
-
-    Entries from a previous partition of the same scheme are dropped
-    first — their files were removed by ``_clean_shards``, and stale
-    manifest rows would make every later ``open_store`` fail checksum
-    verification on files that no longer exist.
-    """
+    """Adds shard arrays + the partition block to the store manifest."""
     manifest = store.manifest
-    prefix = f"shard_{scheme}_"
-    for name in [k for k in manifest["arrays"] if k.startswith(prefix)]:
-        del manifest["arrays"][name]
+    # a fresh edge partition replaces the whole "partition" block, which
+    # also carries the ELL-shard meta — drop both sets of stale entries
+    _drop_manifest_arrays(manifest, (f"shard_{scheme}_", "shard_ell_"))
     for (r, b), c in np.ndenumerate(counts):
         if c == 0:
             continue
         stem = _shard_stem(scheme, r, b)
         for field, dtype in _SHARD_FIELDS:
-            rel = f"shards/{stem}_{field}.bin"
-            manifest["arrays"][f"shard_{stem}_{field}"] = {
-                "file": rel,
-                "dtype": np.dtype(dtype).newbyteorder("<").str,
-                "shape": [int(c)],
-                "crc32": fmt.crc32_file(store.path / rel),
-            }
+            _add_shard_array(store, stem, field, dtype, (c,))
     manifest["partition"] = part_meta
-    tmp = store.path / (fmt.MANIFEST_NAME + ".tmp")
-    tmp.write_text(json.dumps(manifest, indent=1, sort_keys=True))
-    tmp.replace(store.path / fmt.MANIFEST_NAME)
+    _write_manifest(store)
 
 
 def _rank_within_key(key: np.ndarray, running: np.ndarray) -> np.ndarray:
@@ -128,6 +152,7 @@ def partition_store(
     shdir = store.path / "shards"
     shdir.mkdir(exist_ok=True)
     _clean_shards(shdir, "1d")  # appends must start from empty files
+    _clean_shards(shdir, "ell")  # geometry derives from the 1d meta
     counts = np.zeros((n_replica, n_blocks), np.int64)
     running = np.zeros(n_blocks, np.int64)
     for s, d, w in store.iter_coo(chunk_edges):
@@ -198,6 +223,131 @@ def load_partition(store: GraphStore):
 
 
 # ----------------------------------------------------------------------------
+# 1D ELL shards (mesh frontier mode)
+# ----------------------------------------------------------------------------
+
+_ELL_FIELDS = (("nbr", np.int32), ("wgt", np.float32), ("row2v", np.int32))
+
+
+def _register_ell_shards(store: GraphStore, counts: np.ndarray, k: int) -> None:
+    """Adds ELL shard arrays + the ``partition.ell`` block to the manifest."""
+    _drop_manifest_arrays(store.manifest, ("shard_ell_",))
+    for (r, b), c in np.ndenumerate(counts):
+        if c == 0:
+            continue
+        stem = _shard_stem("ell", r, b)
+        for field, dtype in _ELL_FIELDS:
+            shape = (c, k) if field != "row2v" else (c,)
+            _add_shard_array(store, stem, field, dtype, shape)
+    store.manifest["partition"]["ell"] = {"k": int(k), "counts": counts.tolist()}
+    _write_manifest(store)
+
+
+def partition_ell_store(
+    store: GraphStore,
+    *,
+    k: int,
+    chunk_vertices: int = 1 << 16,
+) -> dict:
+    """Writes 1D source-block ELL shards next to the existing edge shards.
+
+    The split-row ELLPACK view (row width ``k``, high-degree rows split —
+    exactly :func:`repro.core.graph.to_ell`'s layout) is built chunkwise
+    from the memmapped CSR and bucketed by the vertex block owning each
+    row's *source*, dealt round-robin across replicas in global row
+    order — bit-for-bit what
+    :func:`repro.core.dist_steiner.partition_ell` produces from the
+    materialized graph.  Requires a 1D edge partition (its ``nb`` /
+    replica / block geometry is reused).
+    """
+    if not (isinstance(k, int) and k >= 1):
+        raise ValueError(f"ELL row width k must be a positive int, got {k!r}")
+    meta = store.partition_meta
+    if not meta or meta.get("scheme") != "1d":
+        raise StoreFormatError(
+            f"{store.path}: ELL shards ride the 1D partition geometry — "
+            f"run `python -m repro.graphstore partition --scheme 1d` first "
+            f"(found {meta and meta.get('scheme')!r})"
+        )
+    R, B, nb = meta["n_replica"], meta["n_blocks"], meta["nb"]
+    n = store.n
+    indptr = np.asarray(store.indptr)
+    deg = np.diff(indptr).astype(np.int64)
+    rows_per_v = np.maximum(1, -(-deg // k))
+    row_off = np.concatenate([[0], np.cumsum(rows_per_v)])
+    # first global row index of each block (blocks are vertex-contiguous)
+    block_first_row = row_off[np.minimum(np.arange(B, dtype=np.int64) * nb, n)]
+
+    shdir = store.path / "shards"
+    shdir.mkdir(exist_ok=True)
+    _clean_shards(shdir, "ell")
+    counts = np.zeros((R, B), np.int64)
+    for v0 in range(0, n, chunk_vertices):
+        v1 = min(v0 + chunk_vertices, n)
+        r0, r1 = int(row_off[v0]), int(row_off[v1])
+        rows_c = r1 - r0
+        nbr = np.zeros((rows_c, k), np.int32)
+        wgt = np.full((rows_c, k), np.inf, np.float32)
+        row2v = np.repeat(
+            np.arange(v0, v1, dtype=np.int32), rows_per_v[v0:v1]
+        )
+        e0, e1 = int(indptr[v0]), int(indptr[v1])
+        if e1 > e0:
+            c = deg[v0:v1]
+            edge_v = np.repeat(np.arange(v0, v1, dtype=np.int64), c)
+            within = np.arange(e0, e1) - np.repeat(indptr[v0:v1], c)
+            flat = (row_off[edge_v] - r0) * k + within
+            nbr.reshape(-1)[flat] = store.indices[e0:e1]
+            wgt.reshape(-1)[flat] = store.weights[e0:e1]
+        blk = row2v.astype(np.int64) // nb
+        rep = (np.arange(r0, r1) - block_first_row[blk]) % R
+        for r in range(R):
+            mr = rep == r
+            if not mr.any():
+                continue
+            blk_r = blk[mr]
+            for b in np.unique(blk_r):
+                mb = mr.copy()
+                mb[mr] = blk_r == b
+                stem = _shard_stem("ell", r, int(b))
+                for (field, dtype), arr in zip(
+                    _ELL_FIELDS, (nbr[mb], wgt[mb], row2v[mb])
+                ):
+                    with open(shdir / f"{stem}_{field}.bin", "ab") as h:
+                        h.write(np.ascontiguousarray(arr, dtype=dtype).tobytes())
+                counts[r, int(b)] += int(mb.sum())
+    _register_ell_shards(store, counts, k)
+    return store.manifest["partition"]["ell"]
+
+
+def load_partition_ell(store: GraphStore):
+    """Per-shard loads → the exact padded 1D ``EllPartition`` layout
+    (bucket geometry shared with the host partitioner via
+    ``ell_bucket_arrays`` — bit-for-bit agreement is a contract)."""
+    from repro.core.dist_steiner import EllPartition, ell_bucket_arrays
+
+    meta = store.partition_meta
+    if not meta or meta.get("scheme") != "1d" or "ell" not in meta:
+        raise StoreFormatError(
+            f"{store.path}: no 1D ELL partition in manifest — run "
+            f"`python -m repro.graphstore partition --scheme 1d "
+            f"--ell-width K` first"
+        )
+    nb, bm = meta["nb"], meta["block_multiple"]
+    k = meta["ell"]["k"]
+    counts = np.asarray(meta["ell"]["counts"], np.int64)
+    nbr, wgt, row2v, _ = ell_bucket_arrays(counts, k, nb, bm)
+    for (r, b), c in np.ndenumerate(counts):
+        if c == 0:
+            continue
+        stem = _shard_stem("ell", r, b)
+        nbr[r, b, :c] = store.array(f"shard_{stem}_nbr")
+        wgt[r, b, :c] = store.array(f"shard_{stem}_wgt")
+        row2v[r, b, :c] = store.array(f"shard_{stem}_row2v")
+    return EllPartition.from_buckets(nbr, wgt, row2v, n=store.n, nb=nb)
+
+
+# ----------------------------------------------------------------------------
 # 2D edge-grid partition
 # ----------------------------------------------------------------------------
 
@@ -216,6 +366,7 @@ def partition_store_2d(
     shdir = store.path / "shards"
     shdir.mkdir(exist_ok=True)
     _clean_shards(shdir, "2d")  # appends must start from empty files
+    _clean_shards(shdir, "ell")  # keyed to the replaced partition meta
     counts = np.zeros((R * C,), np.int64)
     for s, d, w in store.iter_coo(chunk_edges):
         s64 = s.astype(np.int64)

@@ -161,8 +161,17 @@ class SteinerServer:
             b: collections.deque() for b in sorted(config.buckets)
         }
         self._next_ticket = 0
-        # counters (latency reservoir bounded: the server is long-lived)
-        self._latencies: "collections.deque[float]" = collections.deque(
+        # results computed by a flush() that failed part-way (a later
+        # batch raised): delivered by the next flush instead of being
+        # lost with the exception
+        self._ready: Dict[int, QueryResult] = {}
+        # counters (latency reservoirs bounded: the server is long-lived);
+        # cache hits are ready at batch assembly while fresh solves wait
+        # for the executable, so the two populations get separate streams
+        self._lat_fresh: "collections.deque[float]" = collections.deque(
+            maxlen=16384
+        )
+        self._lat_cached: "collections.deque[float]" = collections.deque(
             maxlen=16384
         )
         self._completed = 0
@@ -241,8 +250,16 @@ class SteinerServer:
         return totals, nedges, edges
 
     def flush(self) -> Dict[int, QueryResult]:
-        """Drains every bucket queue; returns {ticket: QueryResult}."""
-        out: Dict[int, QueryResult] = {}
+        """Drains every bucket queue; returns {ticket: QueryResult}.
+
+        Exception-safe: if a solver failure interrupts a batch, that
+        batch's tickets go back on their queue, results of batches that
+        already completed in this call are held for the next ``flush``,
+        and the exception propagates — no ticket is ever dropped.
+        """
+        # deliver results stranded by a previously failed flush first
+        out: Dict[int, QueryResult] = self._ready
+        self._ready = {}
         # the solver config owns the lane count (ServeConfig.max_batch is
         # copied into it at construction)
         B = self._handle.config.batch_size
@@ -267,9 +284,20 @@ class SteinerServer:
                     n_real = len(lanes)
                     while len(lanes) < B:  # inert batch-dim padding
                         lanes.append(lanes[0])
-                    totals, nedges, edges = self._execute(
-                        bucket, np.stack(lanes), n_real
-                    )
+                    try:
+                        totals, nedges, edges = self._execute(
+                            bucket, np.stack(lanes), n_real
+                        )
+                    except Exception:
+                        # the riders were already popped — put them back
+                        # (original order) and stash the results of the
+                        # batches this call already completed, so a
+                        # solver failure drops no tickets; then surface
+                        # the failure to the caller
+                        for p, _ in reversed(riders):
+                            queue.appendleft(p)
+                        self._ready = out
+                        raise
                     t_done = time.perf_counter()
                     self._batches[bucket] += 1
                     self._lanes_run += B
@@ -297,7 +325,9 @@ class SteinerServer:
                     # hits were ready at assembly; only fresh lanes waited
                     # for the batch execute
                     lat = (t_assembled if from_cache else t_done) - p.t_submit
-                    self._latencies.append(lat)
+                    (self._lat_cached if from_cache else self._lat_fresh).append(
+                        lat
+                    )
                     out[p.ticket] = hit.with_latency(lat, from_cache)
                 self._t_last = t_done
         return out
@@ -307,26 +337,58 @@ class SteinerServer:
     # ------------------------------------------------------------------
 
     def query(self, seeds: Sequence[int]) -> QueryResult:
-        """Synchronous single query (micro-batch of one)."""
+        """Synchronous single query (micro-batch of one).
+
+        The internal flush may also drain tickets submitted by other
+        callers (or stranded by an earlier failed flush); those results
+        are held for their own ``flush`` consumers, not discarded.
+        """
         t = self.submit(seeds)
-        return self.flush()[t]
+        results = self.flush()
+        mine = results.pop(t)
+        self._ready.update(results)
+        return mine
 
     def query_many(self, seed_sets: Sequence[Sequence[int]]) -> List[QueryResult]:
-        """Submits a burst, flushes once, returns results in input order."""
+        """Submits a burst, flushes once, returns results in input order.
+
+        As with :meth:`query`, results for tickets that are not part of
+        this burst are held for their own ``flush`` consumers.
+        """
         tickets = [self.submit(s) for s in seed_sets]
         results = self.flush()
-        return [results[t] for t in tickets]
+        out = [results.pop(t) for t in tickets]
+        self._ready.update(results)
+        return out
 
     # ------------------------------------------------------------------
     # telemetry
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        lat = (
-            np.asarray(list(self._latencies))
-            if self._latencies
-            else np.zeros(1)
-        )
+        """Service counters.
+
+        Latency percentiles are ``None`` until the matching population
+        has served at least one query — an idle server reports no
+        latency rather than a fabricated 0.0 ms.  ``latency_*`` covers
+        all completed queries; ``fresh_*`` / ``cached_*`` split the
+        solve path from the cache path (their distributions differ by
+        orders of magnitude, so one merged stream is misleading).
+        """
+
+        def pcts(d):
+            if not d:
+                return None, None
+            lat = np.asarray(list(d))
+            return (
+                float(np.percentile(lat, 50) * 1e3),
+                float(np.percentile(lat, 99) * 1e3),
+            )
+
+        all_lat = list(self._lat_fresh) + list(self._lat_cached)
+        p50, p99 = pcts(all_lat)
+        fresh_p50, fresh_p99 = pcts(self._lat_fresh)
+        cached_p50, cached_p99 = pcts(self._lat_cached)
         span = (
             (self._t_last - self._t_first)
             if (self._t_first is not None and self._t_last is not None)
@@ -340,8 +402,12 @@ class SteinerServer:
             ),
             "cache_entries": len(self.cache),
             "qps": self._completed / span if span > 0 else 0.0,
-            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "latency_p50_ms": p50,
+            "latency_p99_ms": p99,
+            "fresh_p50_ms": fresh_p50,
+            "fresh_p99_ms": fresh_p99,
+            "cached_p50_ms": cached_p50,
+            "cached_p99_ms": cached_p99,
             "lanes_run": self._lanes_run,
             "lanes_padded": self._lanes_padded,
             "pad_waste": (

@@ -445,10 +445,68 @@ def _place_replicated(mesh, x):
 
 @register_backend("mesh1d")
 class Mesh1DBackend(_Backend):
-    """The paper's design: dst-block 1D partition over a device mesh."""
+    """The paper's design: dst-block 1D partition over a device mesh.
 
-    preprocessing = ("mesh", "partition_1d", "device_put")
+    ``mode="frontier"`` swaps the edge partition for a per-block sharded
+    ELL view (:class:`repro.core.dist_steiner.EllPartition`) driving the
+    prioritized top-K schedule; everything else (mesh, placement,
+    executable cache) is shared.
+    """
+
+    preprocessing = ("mesh", "partition_1d [or ell_partition]", "device_put")
     seeds_ndim = 1
+
+    @staticmethod
+    def _part_arrays(cfg: SolverConfig, part):
+        """The three flat device arrays of either partition flavour."""
+        if cfg.mode == "frontier":
+            return (part.nbr, part.wgt, part.row2v)
+        return (part.src, part.dst, part.w)
+
+    def _prepare_frontier(self, cfg: SolverConfig, g, store, mesh):
+        """Sharded-ELL artifacts for the prioritized schedule.
+
+        Stores with a matching prebuilt 1D ELL partition load per-shard
+        (the edge list is never expanded on the host); other stores build
+        the global ELL chunkwise off the memmapped CSR; in-memory graphs
+        go through the bounded ``ell_view_cached`` memo.
+        """
+        from repro.core.dist_steiner import partition_ell
+
+        n_replica, n_blocks = cfg.mesh_shape
+        if store is not None:
+            meta = store.partition_meta
+            if (
+                meta
+                and meta.get("scheme") == "1d"
+                and (meta["n_replica"], meta["n_blocks"]) == (n_replica, n_blocks)
+                and meta.get("ell", {}).get("k") == cfg.ell_width
+            ):
+                ellpart = store.load_partition_ell()
+            else:
+                ellpart = partition_ell(
+                    store.ell(cfg.ell_width),
+                    n_replica=n_replica,
+                    n_blocks=n_blocks,
+                )
+            graph_art = store
+        else:
+            ellpart = partition_ell(
+                ell_view_cached(g, cfg.ell_width),
+                n_replica=n_replica,
+                n_blocks=n_blocks,
+            )
+            graph_art = g
+        edges = _place_edges(
+            mesh, (ellpart.nbr, ellpart.wgt, ellpart.row2v), ("data", "model")
+        )
+        return {
+            "graph": graph_art,
+            "mesh": mesh,
+            "ellpart": ellpart,
+            "edges": edges,
+            "executables": {},
+        }
 
     def prepare(self, cfg: SolverConfig, g) -> dict:
         from repro.core.dist_steiner import partition_edges
@@ -456,6 +514,8 @@ class Mesh1DBackend(_Backend):
         g, store = _as_graph_and_store(g)
         n_replica, n_blocks = cfg.mesh_shape
         mesh = _device_mesh(cfg.mesh_shape, ("data", "model"))
+        if cfg.mode == "frontier":
+            return self._prepare_frontier(cfg, g, store, mesh)
         if store is not None:
             meta = store.partition_meta
             if (
@@ -505,10 +565,13 @@ class Mesh1DBackend(_Backend):
         }
 
     def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
+        part = (
+            artifacts["ellpart"] if cfg.mode == "frontier" else artifacts["part"]
+        )
         res = self.solve_prepared(
             cfg,
             artifacts["mesh"],
-            artifacts["part"],
+            part,
             seeds,
             edges=artifacts["edges"],
             executables=artifacts["executables"],
@@ -531,16 +594,25 @@ class Mesh1DBackend(_Backend):
         edges=None,
         executables: Optional[dict] = None,
     ):
-        """Runs on a prebuilt (mesh, Partition) pair — the legacy
-        ``run_dist_steiner`` path and the prepared-handle path share it.
-        ``executables``/``edges`` come from the handle when present; the
-        legacy path passes neither and pays placement + trace per call."""
+        """Runs on a prebuilt (mesh, Partition | EllPartition) pair — the
+        legacy ``run_dist_steiner`` path and the prepared-handle path
+        share it.  ``executables``/``edges`` come from the handle when
+        present; the legacy path passes neither and pays placement +
+        trace per call."""
         from repro.core.dist_steiner import (
             DistSteinerConfig,
+            EllPartition,
             make_dist_steiner,
             result_from_device,
         )
 
+        if cfg.mode == "frontier" and not isinstance(part, EllPartition):
+            raise TypeError(
+                "mesh1d mode='frontier' runs on an EllPartition (the "
+                "sharded ELL view) — prepare the graph through "
+                "SteinerSolver(cfg).prepare(graph); the legacy "
+                "run_dist_steiner edge-Partition path has no ELL view"
+            )
         seeds = np.asarray(seeds, np.int32)
         replica_axes = tuple(replica_axes)
         key = (len(seeds), vert_axis, replica_axes)
@@ -558,6 +630,7 @@ class Mesh1DBackend(_Backend):
                 delta=cfg.delta,
                 fuse_gather=cfg.fuse_gather,
                 lab_i16=cfg.lab_i16,
+                frontier_size=cfg.frontier_size,
             )
             fn = make_dist_steiner(
                 mesh, dcfg, vert_axis=vert_axis, replica_axes=replica_axes
@@ -567,7 +640,7 @@ class Mesh1DBackend(_Backend):
                 executables[key] = fn
         if edges is None:
             edges = _place_edges(
-                mesh, (part.src, part.dst, part.w), (*replica_axes, vert_axis)
+                mesh, self._part_arrays(cfg, part), (*replica_axes, vert_axis)
             )
         out = fn(*edges, _place_replicated(mesh, seeds))
         return result_from_device(out, part.n)

@@ -22,13 +22,18 @@ MODES: Tuple[str, ...] = ("dense", "bucket", "frontier", "pallas")
 MST_ALGOS: Tuple[str, ...] = ("prim", "boruvka")
 
 # Which Voronoi schedules each backend can execute.  "frontier" and
-# "pallas" need the ELL view, which only the single-device pipelines
-# (jitted / vmapped) consume today; the mesh engines run the paper's
-# dense/Δ-bucket schedules over shard_map.
+# "pallas" need the ELL view: the single-device pipelines (jitted /
+# vmapped) consume the resident EllGraph, and "mesh1d" consumes a
+# per-block sharded EllPartition (top-K prioritized schedule inside the
+# shard_map body — the paper's §IV message prioritization).  "mesh2d"
+# stays dense/Δ-bucket: its (src-row × dst-col) layout splits one
+# source's adjacency across the column axis, so a source-major ELL row
+# has no single owning device (see DESIGN.md §Adaptation).  "pallas"
+# remains single-device (kernels run under jit, not shard_map).
 BACKEND_MODES = {
     "single": ("dense", "bucket", "frontier", "pallas"),
     "batch": ("dense", "bucket", "pallas"),
-    "mesh1d": ("dense", "bucket"),
+    "mesh1d": ("dense", "bucket", "frontier"),
     "mesh2d": ("dense", "bucket"),
 }
 
@@ -49,7 +54,8 @@ class SolverConfig:
       max_iters: safety cap on relaxation rounds (None → 4n + 64).
       ell_width: ELL row width when building the frontier/pallas view.
       frontier_size: top-K frontier rows per round (mode="frontier", and
-        mode="pallas" with ``pallas_frontier=True``).
+        mode="pallas" with ``pallas_frontier=True``); per *device* on
+        backend="mesh1d" (each block runs its own priority queue).
       block_rows: ELL rows per Pallas grid step (mode="pallas").
       src_block: source-block the distance vector into (SB,) VMEM slices
         (mode="pallas"); None keeps dist/lab VMEM-resident.
@@ -136,6 +142,16 @@ class SolverConfig:
             raise ValueError(
                 f"pallas_frontier=True requires mode='pallas', "
                 f"got mode={self.mode!r}"
+            )
+        if (
+            self.backend == "mesh1d"
+            and self.mode == "frontier"
+            and self.local_steps != 1
+        ):
+            raise ValueError(
+                f"local_steps > 1 is not supported with mode='frontier' "
+                f"(top-K candidates must cross devices every round); "
+                f"got local_steps={self.local_steps}"
             )
         ms = self.mesh_shape
         if (

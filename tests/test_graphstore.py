@@ -25,6 +25,7 @@ from repro.graphstore import (
     csr_from_chunks,
     hub_sort_store,
     open_store,
+    partition_ell_store,
     partition_store,
     partition_store_2d,
 )
@@ -404,6 +405,111 @@ def test_load_partition_without_shards_raises(tmp_path):
     store, _ = _rmat_store(tmp_path)
     with pytest.raises(StoreFormatError, match="no 1D partition"):
         store.load_partition()
+
+
+# ----------------------------------------------------------------------------
+# ELL shards (mesh frontier mode)
+# ----------------------------------------------------------------------------
+
+
+def test_partition_ell_store_matches_partition_ell(tmp_path):
+    """Streamed ELL shards == host partition of the store's global ELL,
+    bit for bit (small chunk_vertices exercises the chunked writer)."""
+    from repro.core.dist_steiner import partition_ell
+
+    store, _ = _rmat_store(tmp_path)
+    partition_store(store, n_replica=2, n_blocks=4)
+    partition_ell_store(store, k=8, chunk_vertices=50)
+    store = open_store(store.path)  # verify=True checksums the ELL shards
+    got = store.load_partition_ell()
+    want = partition_ell(store.ell(8), n_replica=2, n_blocks=4)
+    for f in ("n", "nb", "rb", "k", "n_blocks", "n_replica"):
+        assert getattr(got, f) == getattr(want, f), f
+    np.testing.assert_array_equal(got.nbr, want.nbr)
+    np.testing.assert_array_equal(got.wgt, want.wgt)
+    np.testing.assert_array_equal(got.row2v, want.row2v)
+
+
+def test_mesh_frontier_prepare_from_store_no_edge_expansion(tmp_path):
+    """Disk-vs-RAM parity for the mesh frontier mode: a store with a
+    matching prebuilt ELL partition loads per-shard — neither the COO
+    expansion nor the chunked global ELL build runs on the host."""
+    store, _ = _rmat_store(tmp_path, scale=9, ef=6, seed=7)
+    partition_store(store, n_replica=1, n_blocks=1)
+    partition_ell_store(store, k=8)
+    store = open_store(store.path, verify=False)
+
+    src, dst, w, n = rmat_edges(9, 6, seed=7)
+    g = from_edges(src, dst, w, n)
+    seeds = np.random.default_rng(0).choice(n, size=8, replace=False).astype(
+        np.int32
+    )
+    cfg = SolverConfig(
+        backend="mesh1d", mode="frontier", mesh_shape=(1, 1),
+        ell_width=8, frontier_size=64,
+    )
+    mem = SteinerSolver(cfg).prepare(g).solve(seeds)
+
+    def boom(*a, **k):
+        raise AssertionError("host edge expansion on the shard-load path")
+
+    store.coo = boom
+    store.ell = boom
+    handle = SteinerSolver(cfg).prepare(store)
+    disk = handle.solve(seeds)
+    assert disk.total_distance == mem.total_distance
+    assert disk.num_edges == mem.num_edges
+    assert handle.artifact("ellpart").k == 8
+
+
+def test_mesh_frontier_prepare_falls_back_to_chunked_ell(tmp_path):
+    """No prebuilt ELL shards (or a width mismatch) → the chunked
+    off-disk global ELL build, never the O(M) COO expansion."""
+    store, _ = _rmat_store(tmp_path, scale=8, ef=6, seed=4)
+
+    def boom(*a, **k):
+        raise AssertionError("COO expansion on the frontier prepare path")
+
+    store.coo = boom
+    cfg = SolverConfig(
+        backend="mesh1d", mode="frontier", mesh_shape=(1, 1),
+        ell_width=8, frontier_size=64,
+    )
+    handle = SteinerSolver(cfg).prepare(store)
+    seeds = np.arange(2, 20, 3, dtype=np.int32)
+    src, dst, w, n = rmat_edges(8, 6, seed=4)
+    g = from_edges(src, dst, w, n)
+    mem = SteinerSolver(cfg).prepare(g).solve(seeds)
+    assert handle.solve(seeds).total_distance == mem.total_distance
+
+
+def test_repartition_drops_stale_ell_shards(tmp_path):
+    """Re-partitioning replaces the geometry the ELL shards derive from:
+    they must disappear from disk AND manifest (else checksummed opens
+    break or a stale layout gets silently loaded)."""
+    store, _ = _rmat_store(tmp_path)
+    partition_store(store, n_replica=1, n_blocks=4)
+    partition_ell_store(store, k=8)
+    assert "ell" in open_store(store.path, verify=False).partition_meta
+    partition_store(
+        open_store(store.path, verify=False), n_replica=1, n_blocks=2
+    )
+    reopened = open_store(store.path)  # verify=True walks every array
+    assert "ell" not in reopened.partition_meta
+    assert not any(
+        k.startswith("shard_ell_") for k in reopened.manifest["arrays"]
+    )
+    with pytest.raises(StoreFormatError, match="no 1D ELL partition"):
+        reopened.load_partition_ell()
+
+
+def test_partition_ell_store_requires_1d_partition(tmp_path):
+    store, _ = _rmat_store(tmp_path)
+    with pytest.raises(StoreFormatError, match="1D partition"):
+        partition_ell_store(store, k=8)
+    partition_store(store, n_replica=1, n_blocks=2)
+    with pytest.raises(ValueError, match="row width"):
+        partition_ell_store(store, k=0)
 
 
 def test_hub_sort_reorders_and_preserves_solutions(tmp_path):

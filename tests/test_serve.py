@@ -220,3 +220,96 @@ def test_stats_counters():
     assert st["lanes_run"] % 4 == 0
     assert st["latency_p99_ms"] >= st["latency_p50_ms"] >= 0.0
     assert st["qps"] > 0
+
+
+def test_stats_idle_reports_no_latency():
+    """An idle server must not fabricate 0.0 ms percentiles."""
+    g, n, _ = _graph(2)
+    srv = _server(g)
+    st = srv.stats()
+    assert st["completed"] == 0
+    assert st["latency_p50_ms"] is None and st["latency_p99_ms"] is None
+    assert st["fresh_p50_ms"] is None and st["fresh_p99_ms"] is None
+    assert st["cached_p50_ms"] is None and st["cached_p99_ms"] is None
+
+
+def test_stats_split_cache_hit_vs_fresh_latency():
+    g, n, _ = _graph(2)
+    srv = _server(g)
+    q = [1, 9, 17, 25]
+    srv.query(q)  # fresh solve
+    srv.query(q)  # cache hit
+    st = srv.stats()
+    assert st["fresh_p50_ms"] is not None
+    assert st["cached_p50_ms"] is not None
+    # hits skip the executable entirely; their stream must not be merged
+    # into (and drag down) the solve-path percentiles
+    assert st["cached_p50_ms"] <= st["fresh_p50_ms"]
+    assert st["latency_p99_ms"] >= st["latency_p50_ms"]
+
+
+def test_flush_requeues_pendings_on_solver_failure(monkeypatch):
+    """A solver failure mid-flush must not silently drop tickets: the
+    batch's riders (fresh AND cache-hit) go back on the queue and the
+    exception propagates; a later flush serves them."""
+    g, n, _ = _graph(2)
+    srv = _server(g)
+    q_cached, q_fresh = [1, 5, 9], [2, 6, 10]
+    srv.query(q_cached)  # warm the cache
+    t1 = srv.submit(q_cached)  # will ride as a cache hit
+    t2 = srv.submit(q_fresh)  # needs a lane
+    real_solve = srv._handle.solve
+
+    def failing(seed_batch):
+        raise RuntimeError("injected solver failure")
+
+    monkeypatch.setattr(srv._handle, "solve", failing)
+    with pytest.raises(RuntimeError, match="injected solver failure"):
+        srv.flush()
+    assert srv.pending() == 2, "failed batch's tickets must be re-queued"
+    monkeypatch.setattr(srv._handle, "solve", real_solve)
+    out = srv.flush()
+    assert set(out) == {t1, t2}
+    assert out[t1].from_cache and not out[t2].from_cache
+    assert out[t2].total_distance > 0
+
+
+def test_flush_failure_after_completed_batch_loses_no_tickets(monkeypatch):
+    """When a LATER batch fails mid-flush, tickets of batches that
+    already executed in the same call must still be delivered (by the
+    retry flush), not discarded with the exception."""
+    g, n, _ = _graph(1)
+    srv = _server(g, max_batch=2, cache_capacity=0)  # no cache rescue
+    tickets = [srv.submit([2 + i, 30 + i, 7 + i]) for i in range(4)]
+    real_solve = srv._handle.solve
+    calls = {"n": 0}
+
+    def fail_second(seed_batch):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected solver failure")
+        return real_solve(seed_batch)
+
+    monkeypatch.setattr(srv._handle, "solve", fail_second)
+    with pytest.raises(RuntimeError, match="injected solver failure"):
+        srv.flush()
+    # batch 1 (tickets 0-1) completed; batch 2 (tickets 2-3) re-queued
+    assert srv.pending() == 2
+    monkeypatch.setattr(srv._handle, "solve", real_solve)
+    out = srv.flush()
+    assert set(out) == set(tickets), "completed batch's tickets were lost"
+    assert all(out[t].total_distance > 0 for t in tickets)
+
+
+def test_query_preserves_other_callers_results(monkeypatch):
+    """query()/query_many() flush the shared queues; results belonging
+    to other submitters (or stranded by an earlier failed flush) must
+    stay deliverable to their own flush() call, not be discarded."""
+    g, n, _ = _graph(1)
+    srv = _server(g, max_batch=2, cache_capacity=0)
+    t_other = srv.submit([3, 11, 19])  # a flush()-level consumer's ticket
+    r_mine = srv.query([4, 12, 20])  # drains t_other's batch too
+    assert r_mine.total_distance > 0
+    out = srv.flush()
+    assert t_other in out, "query() discarded another caller's result"
+    assert out[t_other].total_distance > 0

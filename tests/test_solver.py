@@ -57,12 +57,17 @@ def test_unknown_mst_algo_rejected():
 def test_mode_backend_cross_validation():
     with pytest.raises(ValueError, match="frontier.*not supported"):
         SolverConfig(backend="batch", mode="frontier")
-    with pytest.raises(ValueError, match="not supported"):
-        SolverConfig(backend="mesh1d", mode="frontier")
+    with pytest.raises(ValueError, match="frontier.*not supported"):
+        SolverConfig(backend="mesh2d", mode="frontier")
     with pytest.raises(ValueError, match="pallas.*not supported"):
         SolverConfig(backend="mesh1d", mode="pallas")
     with pytest.raises(ValueError, match="pallas.*not supported"):
         SolverConfig(backend="mesh2d", mode="pallas")
+    # the sharded-ELL prioritized schedule is a supported combination
+    SolverConfig(backend="mesh1d", mode="frontier")
+    # ... but cannot amortize collectives: candidates must cross devices
+    with pytest.raises(ValueError, match="local_steps"):
+        SolverConfig(backend="mesh1d", mode="frontier", local_steps=2)
 
 
 def test_pallas_knobs_validated():
@@ -122,6 +127,7 @@ PARITY_SPECS = [
     ("single", "pallas"),
     ("mesh1d", "dense"),
     ("mesh1d", "bucket"),
+    ("mesh1d", "frontier"),
     ("mesh2d", "bucket"),
 ]
 
@@ -335,6 +341,124 @@ def test_ell_view_cached_identity_and_rebuild():
 
 
 # ----------------------------------------------------------------------------
+# mesh frontier mode — the distributed prioritized schedule (paper §IV)
+# ----------------------------------------------------------------------------
+
+
+def _mesh_frontier_cfg(**kw):
+    return SolverConfig(
+        backend="mesh1d",
+        mode="frontier",
+        mesh_shape=(1, 1),
+        ell_width=8,
+        frontier_size=32,
+        **kw,
+    )
+
+
+def test_mesh_frontier_traces_once_and_caches_ellpart():
+    g, n, seeds, edges = _instance(1)
+    _, d_ref = ref.mehlhorn_ref(n, edges, seeds.tolist())
+    handle = SteinerSolver(_mesh_frontier_cfg()).prepare(g)
+    assert handle.artifact("ellpart") is not None
+    assert handle.artifact("part") is None  # no edge partition built
+    first = handle.solve(seeds)
+    assert first.total_distance == pytest.approx(d_ref, abs=1e-4)
+    assert handle.num_executables == 1
+    base = trace_count("mesh1d")
+    rng = np.random.default_rng(0)
+    for _ in range(3):  # same |S|, different seed values
+        s = rng.choice(n, size=len(seeds), replace=False).astype(np.int32)
+        assert handle.solve(s).total_distance > 0
+    assert trace_count("mesh1d") == base, "same-|S| solves must not re-trace"
+    assert handle.num_executables == 1
+
+
+def test_mesh_frontier_fewer_messages_than_bucket():
+    """The acceptance contract: bit-identical total with strictly less
+    message work than the Δ-bucket schedule (paper Fig. 5/6)."""
+    g, n, seeds, edges = _instance(0)
+    front = SteinerSolver(_mesh_frontier_cfg()).prepare(g).solve(seeds)
+    bucket = (
+        SteinerSolver(
+            SolverConfig(backend="mesh1d", mode="bucket", mesh_shape=(1, 1))
+        )
+        .prepare(g)
+        .solve(seeds)
+    )
+    assert front.total_distance == bucket.total_distance
+    assert front.num_edges == bucket.num_edges
+    assert front.raw.messages < bucket.raw.messages
+
+
+def test_mesh_frontier_duplicate_seed_padding_inert():
+    """The serve planner's pad-with-duplicates contract holds under the
+    prioritized mesh schedule (and the min-scatter init fix)."""
+    g, n, seeds, edges = _instance(2)
+    handle = SteinerSolver(_mesh_frontier_cfg()).prepare(g)
+    base = handle.solve(seeds)
+    padded = np.concatenate([seeds, np.full(3, seeds[0], np.int32)])
+    out = handle.solve(padded)
+    assert out.total_distance == base.total_distance
+    assert out.num_edges == base.num_edges
+    np.testing.assert_array_equal(
+        np.asarray(out.raw.dist), np.asarray(base.raw.dist)
+    )
+    assert out.raw.edge_set() == base.raw.edge_set()
+
+
+def test_mesh_frontier_rejects_legacy_edge_partition():
+    """run_dist_steiner's (mesh, Partition) pair has no ELL view."""
+    from repro.core.dist_steiner import partition_edges, run_dist_steiner
+    from repro import compat
+
+    g, n, seeds, edges = _instance(0)
+    part = partition_edges(
+        np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w), n,
+        n_replica=1, n_blocks=1, symmetrize=False,
+    )
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(TypeError, match="EllPartition"):
+        run_dist_steiner(mesh, part, seeds, mode="frontier")
+
+
+# ----------------------------------------------------------------------------
+# mesh-path wire-format validation (DistSteinerConfig)
+# ----------------------------------------------------------------------------
+
+
+def _dcfg(**kw):
+    from repro.core.dist_steiner import DistSteinerConfig
+
+    return DistSteinerConfig(n=64, nb=16, **kw)
+
+
+def test_lab_i16_accepts_full_int16_range():
+    # |S| = 32767 fits int16 (labels take values in [0, S]); the old
+    # traced assert rejected it off-by-one
+    _dcfg(num_seeds=32767, lab_i16=True)
+
+
+def test_lab_i16_rejects_s_32768():
+    with pytest.raises(ValueError, match="lab_i16.*32768"):
+        _dcfg(num_seeds=32768, lab_i16=True)
+
+
+def test_fused_gather_label_packing_guard():
+    # f32 label packing is exact below 2^24; at/above it would silently
+    # corrupt cell ownership — reject at config time
+    _dcfg(num_seeds=2**24 - 1, fuse_gather=True)
+    with pytest.raises(ValueError, match="fuse_gather.*2\\*\\*24"):
+        _dcfg(num_seeds=2**24, fuse_gather=True)
+    _dcfg(num_seeds=2**24, fuse_gather=False)  # unfused i32 gather is fine
+
+
+def test_dist_config_frontier_rejects_local_steps():
+    with pytest.raises(ValueError, match="local_steps"):
+        _dcfg(num_seeds=4, mode="frontier", local_steps=2)
+
+
+# ----------------------------------------------------------------------------
 # preset plumbing (configs.steiner → dryrun)
 # ----------------------------------------------------------------------------
 
@@ -347,13 +471,16 @@ def test_paper_workload_presets_are_solver_configs():
         "ukw_1k",
         "clw_10k",
         "serve_pallas",
+        "mesh_frontier",
     }
-    for name in ("lvj_1k", "ukw_1k", "clw_10k"):
+    for name in ("lvj_1k", "ukw_1k", "clw_10k", "mesh_frontier"):
         p = solver_preset(name)
         assert isinstance(p, SolverConfig)
         assert p.backend == "mesh1d"
     assert solver_preset("clw_10k").pair_chunks > 1  # §V-F chunked Allreduce
     fast = solver_preset("serve_pallas")  # the kernel fast path preset
     assert (fast.backend, fast.mode) == ("batch", "pallas")
+    mf = solver_preset("mesh_frontier")  # §IV message prioritization
+    assert (mf.mode, mf.local_steps) == ("frontier", 1)
     with pytest.raises(KeyError, match="no solver preset"):
         solver_preset("nope")
