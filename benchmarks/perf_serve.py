@@ -59,11 +59,22 @@ def main() -> None:
     ap.add_argument("--mode", default="bucket", choices=("dense", "bucket"))
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome trace (queue-wait / assemble / "
+                         "solve spans per micro-batch; Perfetto-loadable)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the server's Prometheus metrics "
+                         "(plus the global obs registry)")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.core import from_edges
     from repro.data.graphs import rmat_edges
     from repro.serve import ServeConfig, SteinerServer
+
+    if args.trace or args.metrics:
+        obs.enable(trace=args.trace is not None,
+                   metrics=args.metrics is not None)
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
     rng = np.random.default_rng(args.seed)
@@ -170,6 +181,15 @@ def main() -> None:
     }
     OUT.write_text(json.dumps(record, indent=1))
     print(f"wrote {OUT}")
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"wrote {args.trace}")
+    if args.metrics:
+        # the server's own registry plus whatever the global one gathered
+        Path(args.metrics).write_text(
+            server.prometheus_text() + obs.prometheus_text()
+        )
+        print(f"wrote {args.metrics}")
 
 
 def _backend() -> str:

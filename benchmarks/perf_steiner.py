@@ -61,10 +61,17 @@ MODES = ("dense", "bucket", "frontier", "pallas")
 def run_handle_bench(args) -> None:
     import numpy as np
 
+    from repro import obs
     from repro.core.graph import from_edges
     from repro.data.graphs import rmat_edges, select_seeds
     from repro.solver import SolverConfig, SteinerSolver, trace_count
 
+    if args.trace or args.metrics:
+        # spans/metrics record the run; telemetry itself always rides the
+        # loops (SolverConfig.telemetry_rounds), so enabling obs changes
+        # no executables — the retrace assertions below still hold
+        obs.enable(trace=args.trace is not None,
+                   metrics=args.metrics is not None)
     rng_seed = args.seed
     t0 = time.perf_counter()
     if args.store:
@@ -131,10 +138,12 @@ def run_handle_bench(args) -> None:
         }
         extra = ""
         if mesh_stats:
-            raw = first.raw
-            row["iterations_q0"] = int(raw.iterations)
-            row["relaxations_q0"] = float(raw.relaxations)
-            row["messages_q0"] = float(raw.messages)
+            # uniform SolveOutput.telemetry (Python ints) — no more
+            # digging backend-native f32 counters out of .raw
+            t = first.telemetry
+            row["iterations_q0"] = int(t.iterations)
+            row["relaxations_q0"] = float(t.relaxations)
+            row["messages_q0"] = float(t.messages)
             extra = (
                 f"messages={row['messages_q0']:.3e} "
                 f"relaxations={row['relaxations_q0']:.3e} "
@@ -196,6 +205,12 @@ def run_handle_bench(args) -> None:
     }
     OUT_HANDLE.write_text(json.dumps(record, indent=1))
     print(f"wrote {OUT_HANDLE}")
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"wrote {args.trace}")
+    if args.metrics:
+        Path(args.metrics).write_text(obs.prometheus_text())
+        print(f"wrote {args.metrics}")
 
 
 # ----------------------------------------------------------------------------
@@ -305,6 +320,11 @@ def main() -> None:
     ap.add_argument("--num-seeds", type=int, default=16)
     ap.add_argument("--queries", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome trace (prepare/solve spans + "
+                         "per-round convergence counters; Perfetto-loadable)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump obs metrics in Prometheus text format")
     # roofline bench
     ap.add_argument("--cell", default="ukw_1k")
     ap.add_argument("--variants", default="base,unfused,lab_i16,ls2,ls4,boruvka")

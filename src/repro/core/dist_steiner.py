@@ -47,6 +47,7 @@ from repro import compat
 from repro.core.distance_graph import local_pair_tables
 from repro.core.mst import boruvka_dense, prim_dense
 from repro.core.tree import bridge_endpoints
+from repro.core.voronoi import _hist_write
 
 INF = jnp.inf
 IMAX = jnp.iinfo(jnp.int32).max
@@ -290,6 +291,11 @@ class DistSteinerConfig:
     fuse_gather: bool = True  # single fused (dist, lab) all-gather
     lab_i16: bool = False  # gather labels as int16 (S < 32768): 6B/vertex
     frontier_size: int = 1024  # top-K dirty rows per device (mode="frontier")
+    # static H: carry a replicated (H+1, 4) per-round telemetry buffer
+    # (obs.ROUND_CHANNELS rows; global — psum'd — counts) through the
+    # fixpoint loop. 0 keeps the raw engine lean; the solver passes its
+    # SolverConfig.telemetry_rounds explicitly.
+    telemetry_rounds: int = 0
 
     def __post_init__(self) -> None:
         if self.mode not in ("dense", "bucket", "frontier"):
@@ -317,6 +323,10 @@ class DistSteinerConfig:
         if self.frontier_size < 1:
             raise ValueError(
                 f"frontier_size must be >= 1, got {self.frontier_size}"
+            )
+        if self.telemetry_rounds < 0:
+            raise ValueError(
+                f"telemetry_rounds must be >= 0, got {self.telemetry_rounds}"
             )
 
 
@@ -408,7 +418,9 @@ def make_dist_steiner(
         out = jax.lax.fori_loop(0, cfg.pair_chunks, cbody, jnp.zeros_like(xp))
         return out.reshape(-1)[: S * S]
 
-    def finish(dist_l, lab_l, pred_l, esrc, edst, ew, off, gids, iters, rlx, msg):
+    def finish(
+        dist_l, lab_l, pred_l, esrc, edst, ew, off, gids, iters, rlx, msg, hist
+    ):
         """Stages 2-6 after Voronoi convergence (shared by every mode):
         pair tables → Allreduce(MIN) → replicated MST → bridge pruning →
         pred-walk marking.  ``(esrc, edst, ew)`` is my shard's directed
@@ -489,7 +501,24 @@ def make_dist_steiner(
             total,
             nedges,
             stats,
+            hist,
         )
+
+    # per-round telemetry row (obs.ROUND_CHANNELS): all channels are
+    # global (psum'd) counts, so the carried history is replica-uniform
+    # and rides a replicated out_spec.  Phantom padding vertices
+    # (gids >= n) never settle; subtract them from the unreached residual.
+    n_ghost = float(npad - cfg.n)
+    hist_init = jnp.zeros((cfg.telemetry_rounds + 1, 4), jnp.float32)
+
+    def round_row(front, dmsg, imp, dl):
+        unr = (
+            jax.lax.psum(
+                jnp.sum(~jnp.isfinite(dl)).astype(jnp.float32), (vert_axis,)
+            )
+            - n_ghost
+        )
+        return jnp.stack([front.astype(jnp.float32), dmsg, imp, unr])
 
     def body(src, dst, w, seeds):
         my_blk = jax.lax.axis_index(vert_axis)
@@ -557,7 +586,7 @@ def make_dist_steiner(
 
         # ---- VORONOI_CELL_ASYNC (paper Alg. 4)
         def vbody(carry):
-            dist_l, lab_l, pred_l, theta, it, rlx, msg, _ = carry
+            dist_l, lab_l, pred_l, theta, it, rlx, msg, _, hist = carry
             distf, labf = gather_state(dist_l, lab_l)
 
             def inner(i, c):
@@ -581,6 +610,19 @@ def make_dist_steiner(
             )
             msg_g = jax.lax.psum(msg_i, all_axes)
             if cfg.mode == "bucket":
+                # frontier = vertices under the bucket threshold this round
+                front = jax.lax.psum(
+                    jnp.sum(jnp.isfinite(dl) & (dl <= theta)).astype(
+                        jnp.float32
+                    ),
+                    (vert_axis,),
+                )
+            else:
+                # dense has no explicit frontier; its active set IS the
+                # improved-vertex set
+                front = imp
+            hist = _hist_write(hist, it, round_row(front, msg_g, imp, dl))
+            if cfg.mode == "bucket":
                 # terminate only on a no-change round with every source active
                 mx_l = jnp.max(jnp.where(jnp.isfinite(dl), dl, -INF))
                 max_fin = jax.lax.pmax(mx_l, all_axes)
@@ -589,13 +631,13 @@ def make_dist_steiner(
                 work = ~done
             else:
                 work = changed
-            return (dl, ll, pl, theta, it + 1, rlx + imp, msg + msg_g, work)
+            return (dl, ll, pl, theta, it + 1, rlx + imp, msg + msg_g, work, hist)
 
         def vcond(carry):
-            *_, it, _, _, work = carry
+            _, _, _, _, it, _, _, work, _ = carry
             return work & (it < cap)
 
-        dist_l, lab_l, pred_l, _, iters, rlx, msg, _ = jax.lax.while_loop(
+        dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
             vcond,
             vbody,
             (
@@ -607,11 +649,12 @@ def make_dist_steiner(
                 jnp.float32(0.0),
                 jnp.float32(0.0),
                 jnp.bool_(True),
+                hist_init,
             ),
         )
 
         return finish(
-            dist_l, lab_l, pred_l, src, dst, w, off, gids, iters, rlx, msg
+            dist_l, lab_l, pred_l, src, dst, w, off, gids, iters, rlx, msg, hist
         )
 
     def frontier_body(nbr, wgt, row2v, seeds):
@@ -644,7 +687,7 @@ def make_dist_steiner(
         dirty0 = jnp.isin(row2v, seeds) & has_edges
 
         def vbody(carry):
-            dist_l, lab_l, pred_l, dirty, it, rlx, msg, _ = carry
+            dist_l, lab_l, pred_l, dirty, it, rlx, msg, _, hist = carry
             # --- the priority queue: top-K lowest-distance dirty rows
             rowdist = jnp.where(dirty, dist_l[lrow], INF)
             _, rows = jax.lax.top_k(-rowdist, K)
@@ -694,17 +737,22 @@ def make_dist_steiner(
             imp = jax.lax.psum(jnp.sum(upd).astype(jnp.float32), (vert_axis,))
             att = jnp.sum(jnp.isfinite(flat_cand)).astype(jnp.float32)
             msg_g = jax.lax.psum(att, all_axes)
+            # frontier = rows actually popped across every per-device queue
+            front = jax.lax.psum(
+                jnp.sum(sel_ok).astype(jnp.float32), all_axes
+            )
+            hist = _hist_write(hist, it, round_row(front, msg_g, imp, dist_l))
             work = jax.lax.pmax(jnp.any(dirty).astype(jnp.int32), all_axes) > 0
             return (
                 dist_l, lab_l, pred_l, dirty, it + 1, rlx + imp, msg + msg_g,
-                work,
+                work, hist,
             )
 
         def vcond(carry):
-            *_, it, _, _, work = carry
+            _, _, _, _, it, _, _, work, _ = carry
             return work & (it < cap)
 
-        dist_l, lab_l, pred_l, _, iters, rlx, msg, _ = jax.lax.while_loop(
+        dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
             vcond,
             vbody,
             (
@@ -716,6 +764,7 @@ def make_dist_steiner(
                 jnp.float32(0.0),
                 jnp.float32(0.0),
                 jnp.bool_(True),
+                hist_init,
             ),
         )
         # my shard's directed edges, flattened from the ELL rows (padding
@@ -723,7 +772,7 @@ def make_dist_steiner(
         esrc = jnp.broadcast_to(row2v[:, None], nbr.shape).reshape(-1)
         return finish(
             dist_l, lab_l, pred_l, esrc, nbr.reshape(-1), wgt.reshape(-1),
-            off, gids, iters, rlx, msg,
+            off, gids, iters, rlx, msg, hist,
         )
 
     if cfg.mode == "frontier":
@@ -750,6 +799,7 @@ def make_dist_steiner(
             rep,
             rep,
             rep,
+            rep,  # hist — global counts, replica-uniform
         ),
         check_vma=False,
     )
@@ -777,6 +827,9 @@ class DistSteinerResult:
     iterations: int
     relaxations: float
     messages: float
+    # (H+1, 4) per-round telemetry (obs.ROUND_CHANNELS rows); None when
+    # the pipeline ran with telemetry_rounds=0
+    history: Optional[np.ndarray] = None
 
     def edge_set(self):
         out = set()
@@ -790,10 +843,22 @@ class DistSteinerResult:
 
 
 def result_from_device(out, n: int) -> DistSteinerResult:
-    """Converts the raw 12-tuple pipeline output to a host-side result."""
-    (dist, lab, pred, marked, path_edge, bu, bv, bw, bvalid, total, ne, stats) = [
-        np.asarray(x) for x in out
-    ]
+    """Converts the raw 13-tuple pipeline output to a host-side result."""
+    (
+        dist,
+        lab,
+        pred,
+        marked,
+        path_edge,
+        bu,
+        bv,
+        bw,
+        bvalid,
+        total,
+        ne,
+        stats,
+        hist,
+    ) = [np.asarray(x) for x in out]
     return DistSteinerResult(
         dist=dist[:n],
         lab=lab[:n],
@@ -809,6 +874,7 @@ def result_from_device(out, n: int) -> DistSteinerResult:
         iterations=int(stats[0]),
         relaxations=float(stats[1]),
         messages=float(stats[2]),
+        history=hist if hist.shape[0] > 1 else None,
     )
 
 

@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.distance_graph import local_pair_tables
 from repro.core.mst import boruvka_dense, prim_dense
 from repro.core.tree import bridge_endpoints
+from repro.core.voronoi import _hist_write
 
 INF = jnp.inf
 IMAX = jnp.iinfo(jnp.int32).max
@@ -126,11 +127,16 @@ def make_dist_steiner_2d(
     delta=None,
     row_axis: str = "data",
     col_axis: str = "model",
+    telemetry_rounds: int = 0,
 ):
     """Jitted 2D pipeline: fn(src_row, dst_col, w, seeds) → same outputs as
     the 1D engine (state in fine-block order = plain vertex order)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    if telemetry_rounds < 0:
+        raise ValueError(
+            f"telemetry_rounds must be >= 0, got {telemetry_rounds}"
+        )
     R = mesh.shape[row_axis]
     C = mesh.shape[col_axis]
     S = num_seeds
@@ -139,6 +145,7 @@ def make_dist_steiner_2d(
     col_n = R * nf  # vertices per column block
     cap = min(max_iters if max_iters is not None else 4 * n + 64, 2**31 - 2)
     both = (row_axis, col_axis)
+    n_ghost = float(npad - n)  # phantom padding vertices, never reached
 
     def body(src_l, dst_l, w, seeds):
         r_idx = jax.lax.axis_index(row_axis)
@@ -171,8 +178,10 @@ def make_dist_steiner_2d(
         row_pos = c_idx * nf  # slice offset within the gathered row block
         col_pos = r_idx * nf  # slice offset within the column range
 
+        hist_init = jnp.zeros((telemetry_rounds + 1, 4), jnp.float32)
+
         def vbody(carry):
-            dist_l, lab_l, pred_l, theta, it, _ = carry
+            dist_l, lab_l, pred_l, theta, it, rlx, msg, _, hist = carry
             # gather (dist, lab) of MY ROW's vertex range — n/R wire
             packed = jnp.stack([dist_l, lab_l.astype(jnp.float32)], axis=0)
             rowst = jax.lax.all_gather(packed, col_axis, axis=1, tiled=True)
@@ -213,6 +222,30 @@ def make_dist_steiner_2d(
             npd = jnp.where(upd, ms_s, pred_l)
             ch_l = jnp.any(upd)
             changed = jax.lax.pmax(ch_l.astype(jnp.int32), both) > 0
+            # state slices are disjoint across the 2D mesh (each device
+            # owns one fine block), so a psum over both axes is the
+            # global count — the paper's per-round work metrics
+            imp = jax.lax.psum(jnp.sum(upd).astype(jnp.float32), both)
+            att = jnp.sum(jnp.isfinite(cand)).astype(jnp.float32)
+            msg_g = jax.lax.psum(att, both)
+            if mode == "bucket":
+                front = jax.lax.psum(
+                    jnp.sum(jnp.isfinite(nd) & (nd <= theta)).astype(
+                        jnp.float32
+                    ),
+                    both,
+                )
+            else:
+                front = imp
+            unr = (
+                jax.lax.psum(
+                    jnp.sum(~jnp.isfinite(nd)).astype(jnp.float32), both
+                )
+                - n_ghost
+            )
+            hist = _hist_write(
+                hist, it, jnp.stack([front, msg_g, imp, unr])
+            )
             if mode == "bucket":
                 mx = jnp.max(jnp.where(jnp.isfinite(nd), nd, -INF))
                 max_fin = jax.lax.pmax(mx, both)
@@ -221,17 +254,28 @@ def make_dist_steiner_2d(
                 work = ~done
             else:
                 work = changed
-            return (nd, nl, npd, theta, it + 1, work)
+            return (
+                nd, nl, npd, theta, it + 1, rlx + imp, msg + msg_g, work, hist
+            )
 
         def vcond(carry):
-            *_, it, work = carry
+            _, _, _, _, it, _, _, work, _ = carry
             return work & (it < cap)
 
-        dist_l, lab_l, pred_l, _, iters, _ = jax.lax.while_loop(
+        dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
             vcond,
             vbody,
-            (dist_l, lab_l, pred_l, jnp.float32(0.0), jnp.int32(0),
-             jnp.bool_(True)),
+            (
+                dist_l,
+                lab_l,
+                pred_l,
+                jnp.float32(0.0),
+                jnp.int32(0),
+                jnp.float32(0.0),
+                jnp.float32(0.0),
+                jnp.bool_(True),
+                hist_init,
+            ),
         )
 
         # ---- stages 2-6: one-time global gathers (cheap phases)
@@ -288,9 +332,9 @@ def make_dist_steiner_2d(
         nedges = jax.lax.psum(
             jnp.sum(path_edge_l).astype(jnp.int32), both
         ) + jnp.sum(bvalid).astype(jnp.int32)
-        stats = jnp.stack([iters.astype(jnp.float32), 0.0, 0.0])
+        stats = jnp.stack([iters.astype(jnp.float32), rlx, msg])
         return (dist_l, lab_l, pred_l, marked_l, path_edge_l,
-                bu, bv, bw, bvalid, total, nedges, stats)
+                bu, bv, bw, bvalid, total, nedges, stats, hist)
 
     espec = P((row_axis, col_axis))
     st = P((row_axis, col_axis))
@@ -301,7 +345,10 @@ def make_dist_steiner_2d(
         body,
         mesh=mesh,
         in_specs=(espec, espec, espec, rep),
-        out_specs=(st, st, st, st, st, rep, rep, rep, rep, rep, rep, rep),
+        out_specs=(
+            st, st, st, st, st, rep, rep, rep, rep, rep, rep, rep,
+            rep,  # hist — global counts, uniform across the mesh
+        ),
         check_vma=False,
     )
     in_sh = tuple(NamedSharding(mesh, s) for s in (espec, espec, espec, rep))

@@ -79,6 +79,7 @@ def run_pipeline(
     mst_algo: str = "prim",
     delta: Optional[float] = None,
     max_iters: Optional[int] = None,
+    telemetry_rounds: int = 0,
 ) -> SteinerResult:
     """Unjitted full pipeline over the COO graph (modes "dense"/"bucket").
 
@@ -87,10 +88,17 @@ def run_pipeline(
     (``_exec_single_coo``) and vmap it over a (B, S) seed batch
     (``_exec_batch``); :func:`steiner_tree` and
     :func:`repro.serve.batch.steiner_tree_batch` are shims over those.
+    ``telemetry_rounds`` (static) sizes the per-round telemetry buffer
+    returned as ``result.stats.history`` (0 → None).
     """
     S = int(num_seeds if num_seeds is not None else seeds.shape[0])
     st, stats = vmod.voronoi_cells(
-        g, seeds, mode=mode, delta=delta, max_iters=max_iters
+        g,
+        seeds,
+        mode=mode,
+        delta=delta,
+        max_iters=max_iters,
+        telemetry_rounds=telemetry_rounds,
     )
     return finish_pipeline(g, st, stats, S, mst_algo)
 

@@ -57,6 +57,32 @@ class VoronoiStats:
     iterations: jax.Array  # i32 — number of global rounds
     relaxations: jax.Array  # f32 — # edge relaxations that improved a vertex
     messages: jax.Array  # f32 — # edge relaxations attempted ("messages")
+    # (H+1, 4) f32 per-round telemetry ring — rows 0..H-1 hold rounds
+    # 0..H-1 in obs.ROUND_CHANNELS order (frontier, messages, relaxations,
+    # unreached); row H absorbs writes from rounds >= H.  None when the
+    # loop ran with telemetry_rounds=0 (the default for direct callers).
+    history: Optional[jax.Array] = None
+
+
+def _round_row(
+    frontier: jax.Array,
+    messages: jax.Array,
+    relaxations: jax.Array,
+    dist: jax.Array,
+) -> jax.Array:
+    """One telemetry row in obs.ROUND_CHANNELS order."""
+    unreached = jnp.sum(~jnp.isfinite(dist)).astype(jnp.float32)
+    return jnp.stack(
+        [frontier.astype(jnp.float32), messages, relaxations, unreached]
+    )
+
+
+def _hist_write(hist: jax.Array, it: jax.Array, row: jax.Array) -> jax.Array:
+    """Writes ``row`` at round ``it``, clamped into the spill slot H."""
+    H = hist.shape[0] - 1
+    return jax.lax.dynamic_update_slice(
+        hist, row[None, :], (jnp.minimum(it, H), 0)
+    )
 
 
 def init_state(n: int, seeds: jax.Array) -> VoronoiState:
@@ -137,6 +163,7 @@ def voronoi_cells(
     mode: str = "bucket",
     delta: Optional[float] = None,
     max_iters: Optional[int] = None,
+    telemetry_rounds: int = 0,
 ) -> tuple[VoronoiState, VoronoiStats]:
     """Computes all Voronoi cells (paper Alg. 2 Step 1).
 
@@ -148,6 +175,10 @@ def voronoi_cells(
         width never advances the bucket threshold, silently spinning
         through the full round cap); default mean finite weight.
       max_iters: safety cap on rounds (default 4n + 64).
+      telemetry_rounds: static H — carry a (H+1, 4) per-round telemetry
+        buffer through the loop and return it as ``stats.history``.
+        0 (default) returns ``history=None``.  H is part of the compiled
+        executable, so host-side observers toggling on/off never retrace.
 
     Returns:
       (VoronoiState, VoronoiStats)
@@ -157,11 +188,20 @@ def voronoi_cells(
     # this isinstance check — the bucket loop's stall guard covers them
     if mode == "bucket" and isinstance(delta, (int, float)) and not delta > 0:
         raise ValueError(f"delta must be positive, got {delta}")
-    return _voronoi_cells(g, seeds, mode=mode, delta=delta, max_iters=max_iters)
+    if telemetry_rounds < 0:
+        raise ValueError(f"telemetry_rounds must be >= 0, got {telemetry_rounds}")
+    return _voronoi_cells(
+        g,
+        seeds,
+        mode=mode,
+        delta=delta,
+        max_iters=max_iters,
+        telemetry_rounds=telemetry_rounds,
+    )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mode", "max_iters")
+    jax.jit, static_argnames=("mode", "max_iters", "telemetry_rounds")
 )
 def _voronoi_cells(
     g: Graph,
@@ -170,10 +210,12 @@ def _voronoi_cells(
     mode: str,
     delta: Optional[float],
     max_iters: Optional[int],
+    telemetry_rounds: int = 0,
 ) -> tuple[VoronoiState, VoronoiStats]:
     n = g.n
     cap = jnp.int32(min(max_iters if max_iters is not None else 4 * n + 64, 2**31 - 2))
     st0 = init_state(n, seeds)
+    hist0 = jnp.zeros((telemetry_rounds + 1, 4), jnp.float32)
     # out-degree: an improved vertex "sends a message" to every neighbor
     # (the paper's generated-message-traffic metric, Fig. 6)
     deg = jax.ops.segment_sum(
@@ -183,24 +225,28 @@ def _voronoi_cells(
     if mode == "dense":
 
         def body(carry):
-            st, it, rlx, msg, _ = carry
+            st, it, rlx, msg, _, hist = carry
             new, upd = relax_dense(g, st)
-            return (
-                new,
-                it + 1,
-                rlx + jnp.sum(upd).astype(jnp.float32),
-                msg + jnp.sum(jnp.where(upd, deg, 0.0)),
-                _changed(st, new),
-            )
+            imp = jnp.sum(upd).astype(jnp.float32)
+            dmsg = jnp.sum(jnp.where(upd, deg, 0.0))
+            # dense has no explicit frontier; its active set IS the
+            # improved-vertex set
+            hist = _hist_write(hist, it, _round_row(imp, dmsg, imp, new.dist))
+            return (new, it + 1, rlx + imp, msg + dmsg, _changed(st, new), hist)
 
         def cond(carry):
-            _, it, _, _, changed = carry
+            _, it, _, _, changed, _ = carry
             return changed & (it < cap)
 
-        st, iters, rlx, msg, _ = jax.lax.while_loop(
-            cond, body, (st0, jnp.int32(0), 0.0, 0.0, jnp.bool_(True))
+        st, iters, rlx, msg, _, hist = jax.lax.while_loop(
+            cond, body, (st0, jnp.int32(0), 0.0, 0.0, jnp.bool_(True), hist0)
         )
-        return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+        return st, VoronoiStats(
+            iterations=iters,
+            relaxations=rlx,
+            messages=msg,
+            history=hist if telemetry_rounds > 0 else None,
+        )
 
     if mode == "bucket":
         finite_w = jnp.where(jnp.isfinite(g.w), g.w, 0.0)
@@ -212,7 +258,7 @@ def _voronoi_cells(
         )
 
         def body(carry):
-            st, theta, it, rlx, msg, _ = carry
+            st, theta, it, rlx, msg, _, hist = carry
             active = st.dist[g.src] <= theta
             cand = jnp.where(active, st.dist[g.src] + g.w, INF)
             new, upd = relax_dense(g, st, active_cand=cand)
@@ -226,26 +272,38 @@ def _voronoi_cells(
             # silently burning the full round cap.
             max_fin = jnp.max(jnp.where(jnp.isfinite(new.dist), new.dist, -INF))
             done = ~changed & ((theta >= max_fin) | (d <= 0))
+            imp = jnp.sum(upd).astype(jnp.float32)
+            dmsg = jnp.sum(jnp.where(upd, deg, 0.0))
+            # frontier = vertices under the bucket threshold (the paper's
+            # eligible-to-send set this round)
+            front = jnp.sum(jnp.isfinite(new.dist) & (new.dist <= theta))
+            hist = _hist_write(hist, it, _round_row(front, dmsg, imp, new.dist))
             theta = jnp.where(changed, theta, theta + d)
-            return (
-                new,
-                theta,
-                it + 1,
-                rlx + jnp.sum(upd).astype(jnp.float32),
-                msg + jnp.sum(jnp.where(upd, deg, 0.0)),
-                ~done,
-            )
+            return (new, theta, it + 1, rlx + imp, msg + dmsg, ~done, hist)
 
         def cond(carry):
-            _, _, it, _, _, work = carry
+            _, _, it, _, _, work, _ = carry
             return work & (it < cap)
 
-        st, _, iters, rlx, msg, _ = jax.lax.while_loop(
+        st, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
             cond,
             body,
-            (st0, jnp.float32(0.0), jnp.int32(0), 0.0, 0.0, jnp.bool_(True)),
+            (
+                st0,
+                jnp.float32(0.0),
+                jnp.int32(0),
+                0.0,
+                0.0,
+                jnp.bool_(True),
+                hist0,
+            ),
         )
-        return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+        return st, VoronoiStats(
+            iterations=iters,
+            relaxations=rlx,
+            messages=msg,
+            history=hist if telemetry_rounds > 0 else None,
+        )
 
     raise ValueError(
         f"unknown mode: {mode!r} — this entry point runs 'dense' | 'bucket'; "
@@ -260,13 +318,16 @@ def _voronoi_cells(
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("frontier_size", "max_rounds"))
+@functools.partial(
+    jax.jit, static_argnames=("frontier_size", "max_rounds", "telemetry_rounds")
+)
 def voronoi_cells_frontier(
     ell: EllGraph,
     seeds: jax.Array,
     *,
     frontier_size: int = 1024,
     max_rounds: Optional[int] = None,
+    telemetry_rounds: int = 0,
 ) -> tuple[VoronoiState, VoronoiStats]:
     """Top-K compacted-frontier Voronoi cells over the ELL adjacency.
 
@@ -284,12 +345,13 @@ def voronoi_cells_frontier(
     cap = jnp.int32(min(max_rounds if max_rounds is not None else 16 * n + 64, 2**31 - 2))
 
     st0 = init_state(n, seeds)
+    hist0 = jnp.zeros((telemetry_rounds + 1, 4), jnp.float32)
     dirty0 = jnp.zeros((R,), jnp.bool_).at[:].set(
         jnp.isin(ell.row2v, seeds)
     )  # rows of seed vertices start dirty
 
     def body(carry):
-        st, dirty, it, rlx, msg = carry
+        st, dirty, it, rlx, msg, hist = carry
         # --- select top-K lowest-distance dirty rows (the "priority queue")
         rowdist = jnp.where(dirty, st.dist[ell.row2v], INF)
         neg = -rowdist  # top_k selects largest
@@ -326,15 +388,24 @@ def voronoi_cells_frontier(
         )
         # rows of updated vertices become dirty again
         dirty = dirty | upd[ell.row2v]
-        rlx = rlx + jnp.sum(upd).astype(jnp.float32)
-        msg = msg + jnp.sum(jnp.isfinite(flat_cand)).astype(jnp.float32)
-        return (new, dirty, it + 1, rlx, msg)
+        imp = jnp.sum(upd).astype(jnp.float32)
+        dmsg = jnp.sum(jnp.isfinite(flat_cand)).astype(jnp.float32)
+        # frontier = ELL rows actually expanded this round (the top-K pop)
+        hist = _hist_write(
+            hist, it, _round_row(jnp.sum(sel_ok), dmsg, imp, new.dist)
+        )
+        return (new, dirty, it + 1, rlx + imp, msg + dmsg, hist)
 
     def cond(carry):
-        _, dirty, it, _, _ = carry
+        _, dirty, it, _, _, _ = carry
         return jnp.any(dirty) & (it < cap)
 
-    st, _, iters, rlx, msg = jax.lax.while_loop(
-        cond, body, (st0, dirty0, jnp.int32(0), 0.0, 0.0)
+    st, _, iters, rlx, msg, hist = jax.lax.while_loop(
+        cond, body, (st0, dirty0, jnp.int32(0), 0.0, 0.0, hist0)
     )
-    return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+    return st, VoronoiStats(
+        iterations=iters,
+        relaxations=rlx,
+        messages=msg,
+        history=hist if telemetry_rounds > 0 else None,
+    )

@@ -9,22 +9,40 @@ Examples::
     # SNAP-style edge list (u v [w] per line, '#' comments)
     python -m repro.graphstore build web.gstore --source tsv --input web.txt
 
-    python -m repro.graphstore info g14.gstore
+    python -m repro.graphstore info g14.gstore --json
 
     # shards for a (1 replica × 4 vertex-block) mesh; --ell-width also
     # writes the mesh-frontier ELL shards (row width 32)
     python -m repro.graphstore partition g14.gstore --scheme 1d \\
         --replicas 1 --blocks 4 --ell-width 32
+
+Output conventions: human-readable progress goes through the
+``repro.graphstore`` logger on stderr (``--quiet`` silences it);
+``--json`` emits one machine-readable JSON document on stdout.
+``--trace out.json`` records a Chrome trace of the run (ingest /
+partition spans — load in ui.perfetto.dev) and ``--metrics out.txt``
+dumps the obs registry in Prometheus text format.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import logging
 import sys
 from typing import Optional, Sequence
 
 import numpy as np
+
+from repro import obs
+
+log = logging.getLogger("repro.graphstore")
+
+
+def _emit(args, doc: dict) -> None:
+    """One result document: JSON on stdout, or logged human-readable."""
+    if args.json:
+        print(json.dumps(doc, indent=1, sort_keys=True))
 
 
 def _cmd_build(args) -> int:
@@ -46,21 +64,36 @@ def _cmd_build(args) -> int:
         )
     else:
         if not args.input:
-            print("--source tsv requires --input PATH", file=sys.stderr)
+            log.error("--source tsv requires --input PATH")
             return 2
         src = TsvEdgeSource(args.input, n=args.n, chunk_edges=args.chunk_edges)
     path, stats = build_store(src, args.store)
-    print(
-        f"built {path}: n={stats.n} m={stats.m_directed} "
-        f"({stats.edges_in} input edges, {stats.chunks} chunks, "
-        f"{stats.seconds:.2f}s, {stats.edges_per_sec:,.0f} edges/s, "
-        f"peak chunk {stats.peak_chunk_bytes / 2**20:.1f} MiB)"
+    log.info(
+        "built %s: n=%d m=%d (%d input edges, %d chunks, %.2fs, "
+        "%.0f edges/s, peak chunk %.1f MiB)",
+        path, stats.n, stats.m_directed, stats.edges_in, stats.chunks,
+        stats.seconds, stats.edges_per_sec,
+        stats.peak_chunk_bytes / 2**20,
     )
+    doc = {
+        "cmd": "build",
+        "path": str(path),
+        "n": stats.n,
+        "m_directed": stats.m_directed,
+        "edges_in": stats.edges_in,
+        "chunks": stats.chunks,
+        "seconds": round(stats.seconds, 3),
+        "edges_per_sec": round(stats.edges_per_sec, 1),
+        "peak_chunk_bytes": stats.peak_chunk_bytes,
+        "fixed_bytes": stats.fixed_bytes,
+    }
     if args.hub_sort:
         store = open_store(path, verify=False)
         out = str(path).replace(".gstore", "") + ".hub.gstore"
         hpath, _ = hub_sort_store(store, out)
-        print(f"hub-sorted copy: {hpath}")
+        log.info("hub-sorted copy: %s", hpath)
+        doc["hub_sorted"] = str(hpath)
+    _emit(args, doc)
     return 0
 
 
@@ -70,6 +103,27 @@ def _cmd_info(args) -> int:
     store = open_store(args.store, verify=args.verify)
     mf = store.manifest
     deg = store.degrees()
+    part = store.partition_meta
+    doc = {
+        "cmd": "info",
+        "path": str(store.path),
+        "format_version": mf["format_version"],
+        "n": int(store.n),
+        "m_directed": int(store.m),
+        "weight_range": mf.get("weight_range"),
+        "degree": {
+            "min": int(deg.min()),
+            "median": int(np.median(deg)),
+            "max": int(deg.max()),
+        },
+        "source": mf.get("source"),
+        "reorder": mf.get("reorder", None),
+        "partition": part or None,
+        "checksums_verified": bool(args.verify),
+    }
+    if args.json:
+        _emit(args, doc)
+        return 0
     print(f"{store.path}")
     print(f"  format_version : {mf['format_version']}")
     print(f"  n              : {store.n:,}")
@@ -78,7 +132,6 @@ def _cmd_info(args) -> int:
     print(f"  degree min/med/max : {deg.min()} / {int(np.median(deg))} / {deg.max()}")
     print(f"  source         : {mf.get('source')}")
     print(f"  reorder        : {mf.get('reorder', None)}")
-    part = store.partition_meta
     if part:
         counts = np.asarray(part["counts"])
         print(
@@ -110,22 +163,34 @@ def _cmd_partition(args) -> int:
         )
     else:
         if args.ell_width is not None:
-            print("--ell-width requires --scheme 1d", file=sys.stderr)
+            log.error("--ell-width requires --scheme 1d")
             return 2
         meta = partition_store_2d(store, R=args.rows, C=args.cols)
     counts = np.asarray(meta["counts"])
-    print(
-        f"partitioned {store.path} [{meta['scheme']}]: "
-        f"{counts.size} shards, edges/shard min={counts.min():,} "
-        f"max={counts.max():,}"
+    log.info(
+        "partitioned %s [%s]: %d shards, edges/shard min=%d max=%d",
+        store.path, meta["scheme"], counts.size, counts.min(), counts.max(),
     )
+    doc = {
+        "cmd": "partition",
+        "path": str(store.path),
+        "meta": {k: v for k, v in meta.items() if k != "counts"},
+        "shards": int(counts.size),
+        "edges_per_shard": {"min": int(counts.min()), "max": int(counts.max())},
+    }
     if args.scheme == "1d" and args.ell_width is not None:
         ell = partition_ell_store(store, k=args.ell_width)
         ec = np.asarray(ell["counts"])
-        print(
-            f"ELL shards [k={ell['k']}]: rows/shard min={ec.min():,} "
-            f"max={ec.max():,} (mesh frontier mode loads these off disk)"
+        log.info(
+            "ELL shards [k=%d]: rows/shard min=%d max=%d "
+            "(mesh frontier mode loads these off disk)",
+            ell["k"], ec.min(), ec.max(),
         )
+        doc["ell"] = {
+            "k": int(ell["k"]),
+            "rows_per_shard": {"min": int(ec.min()), "max": int(ec.max())},
+        }
+    _emit(args, doc)
     return 0
 
 
@@ -133,6 +198,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.graphstore",
         description="Out-of-core .gstore graph storage utilities.",
+    )
+    ap.add_argument(
+        "--json", action="store_true",
+        help="emit one machine-readable JSON document on stdout",
+    )
+    ap.add_argument(
+        "--quiet", action="store_true",
+        help="suppress progress logging (stderr)",
+    )
+    ap.add_argument(
+        "--trace", metavar="PATH", default=None,
+        help="record a Chrome trace of this run (Perfetto-loadable)",
+    )
+    ap.add_argument(
+        "--metrics", metavar="PATH", default=None,
+        help="dump obs metrics in Prometheus text format",
     )
     sub = ap.add_subparsers(dest="cmd", required=True)
 
@@ -173,7 +254,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.set_defaults(fn=_cmd_partition)
 
     args = ap.parse_args(argv)
-    return args.fn(args)
+    # (re)bind the package logger per invocation: progress goes to the
+    # CURRENT stderr (not stdout — --json owns stdout), and --quiet
+    # drops it to WARNING
+    log.handlers.clear()
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(logging.Formatter("%(message)s"))
+    log.addHandler(handler)
+    log.setLevel(logging.WARNING if args.quiet else logging.INFO)
+    log.propagate = False
+    if args.trace or args.metrics:
+        obs.enable(trace=args.trace is not None,
+                   metrics=args.metrics is not None)
+    rc = args.fn(args)
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        log.info("trace written: %s", args.trace)
+    if args.metrics:
+        with open(args.metrics, "w") as h:
+            h.write(obs.prometheus_text())
+        log.info("metrics written: %s", args.metrics)
+    return rc
 
 
 if __name__ == "__main__":

@@ -37,6 +37,7 @@ from typing import Callable, Iterator, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.graphstore.format import StoreWriter
 
 Chunk = Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]
@@ -323,17 +324,29 @@ def csr_two_pass(
     chunks = 0
     peak = 0
     wmin, wmax = np.inf, -np.inf
-    for chunk in source:
-        s, d, w, nbytes = _chunk_pairs(chunk, symmetrize)
-        _check_ids(s, d, n)
-        edges_in += chunk[0].shape[0]
-        chunks += 1
-        counts = np.bincount(s, minlength=n)
-        deg += counts
-        if w.size:
-            wmin = min(wmin, float(w.min()))
-            wmax = max(wmax, float(w.max()))
-        peak = max(peak, nbytes + counts.nbytes)
+    trace = obs.tracing()
+    with obs.span("ingest:pass1_degrees", n=n):
+        for chunk in source:
+            t_c = time.perf_counter()
+            s, d, w, nbytes = _chunk_pairs(chunk, symmetrize)
+            _check_ids(s, d, n)
+            edges_in += chunk[0].shape[0]
+            chunks += 1
+            counts = np.bincount(s, minlength=n)
+            deg += counts
+            if w.size:
+                wmin = min(wmin, float(w.min()))
+                wmax = max(wmax, float(w.max()))
+            peak = max(peak, nbytes + counts.nbytes)
+            if trace:
+                obs.add_span(
+                    "ingest:chunk",
+                    t_c,
+                    time.perf_counter(),
+                    phase="pass1",
+                    chunk=chunks - 1,
+                    edges=int(chunk[0].shape[0]),
+                )
 
     indptr = np.zeros(n + 1, np.int64)
     np.cumsum(deg, out=indptr[1:])
@@ -341,23 +354,34 @@ def csr_two_pass(
     indices, weights = alloc(m)
 
     cursor = indptr[:-1].copy()
-    for chunk in source:
-        s, d, w, nbytes = _chunk_pairs(chunk, symmetrize)
-        if s.size == 0:  # sources may legally yield empty chunks
-            continue
-        o = np.argsort(s, kind="stable")
-        ss, dd, ww = s[o], d[o], w[o]
-        # within-run offsets: position of each edge inside its vertex run
-        run_start = np.r_[0, np.flatnonzero(ss[1:] != ss[:-1]) + 1]
-        run_len = np.diff(np.r_[run_start, ss.shape[0]])
-        within = np.arange(ss.shape[0]) - np.repeat(run_start, run_len)
-        tgt = cursor[ss] + within
-        indices[tgt] = dd
-        weights[tgt] = ww
-        cursor[ss[run_start]] += run_len
-        nbytes += o.nbytes + ss.nbytes + dd.nbytes + ww.nbytes
-        nbytes += run_start.nbytes + run_len.nbytes + within.nbytes + tgt.nbytes
-        peak = max(peak, nbytes)
+    with obs.span("ingest:pass2_scatter", n=n, m=m):
+        for ci, chunk in enumerate(source):
+            t_c = time.perf_counter()
+            s, d, w, nbytes = _chunk_pairs(chunk, symmetrize)
+            if s.size == 0:  # sources may legally yield empty chunks
+                continue
+            o = np.argsort(s, kind="stable")
+            ss, dd, ww = s[o], d[o], w[o]
+            # within-run offsets: position of each edge inside its vertex run
+            run_start = np.r_[0, np.flatnonzero(ss[1:] != ss[:-1]) + 1]
+            run_len = np.diff(np.r_[run_start, ss.shape[0]])
+            within = np.arange(ss.shape[0]) - np.repeat(run_start, run_len)
+            tgt = cursor[ss] + within
+            indices[tgt] = dd
+            weights[tgt] = ww
+            cursor[ss[run_start]] += run_len
+            nbytes += o.nbytes + ss.nbytes + dd.nbytes + ww.nbytes
+            nbytes += run_start.nbytes + run_len.nbytes + within.nbytes + tgt.nbytes
+            peak = max(peak, nbytes)
+            if trace:
+                obs.add_span(
+                    "ingest:chunk",
+                    t_c,
+                    time.perf_counter(),
+                    phase="pass2",
+                    chunk=ci,
+                    edges=int(chunk[0].shape[0]),
+                )
 
     if not np.array_equal(cursor, indptr[1:]):
         raise RuntimeError(
@@ -413,16 +437,36 @@ def build_store(
             writer.create_array("weights", np.float32, (m,)),
         )
 
-    indptr, indices, weights, raw = csr_two_pass(
-        n, source, alloc, symmetrize=symmetrize
-    )
-    indptr_mm[...] = indptr
+    with obs.span(
+        "ingest:build_store",
+        out=str(out_path),
+        source=getattr(source, "describe", type(source).__name__),
+    ):
+        indptr, indices, weights, raw = csr_two_pass(
+            n, source, alloc, symmetrize=symmetrize
+        )
+        indptr_mm[...] = indptr
     dt = time.perf_counter() - t0
     stats = IngestStats(
         seconds=dt,
         edges_per_sec=raw["edges_in"] / dt if dt > 0 else 0.0,
         **raw,
     )
+    for name, help, value in (
+        ("graphstore_ingest_edges_per_sec", "last build_store throughput",
+         stats.edges_per_sec),
+        ("graphstore_ingest_peak_chunk_bytes",
+         "measured per-chunk transient peak of the last ingest",
+         stats.peak_chunk_bytes),
+    ):
+        gauge = obs.gauge(name, help)
+        if gauge is not None:
+            gauge.set(value)
+    ctr = obs.counter(
+        "graphstore_ingest_edges_total", "input edges streamed into stores"
+    )
+    if ctr is not None:
+        ctr.inc(stats.edges_in)
     writer.set_meta(
         n=n,
         m=stats.m_directed,

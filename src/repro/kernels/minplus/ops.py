@@ -24,7 +24,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import EllGraph
-from repro.core.voronoi import VoronoiState, VoronoiStats, init_state
+from repro.core.voronoi import (
+    VoronoiState,
+    VoronoiStats,
+    _hist_write,
+    _round_row,
+    init_state,
+)
 from repro.kernels.minplus.minplus import (
     default_interpret,
     minplus_blocked_call,
@@ -132,7 +138,13 @@ def relax_ell(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_rows", "src_block", "interpret", "max_iters"),
+    static_argnames=(
+        "block_rows",
+        "src_block",
+        "interpret",
+        "max_iters",
+        "telemetry_rounds",
+    ),
 )
 def voronoi_cells_pallas(
     ell: EllGraph,
@@ -142,6 +154,7 @@ def voronoi_cells_pallas(
     src_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     max_iters: Optional[int] = None,
+    telemetry_rounds: int = 0,
 ) -> tuple[VoronoiState, VoronoiStats]:
     """Bellman-Ford Voronoi cells with the Pallas relaxation kernel.
 
@@ -158,8 +171,10 @@ def voronoi_cells_pallas(
         jnp.sum(jnp.isfinite(ell.wgt), axis=1).astype(jnp.float32), ell.row2v, n
     )
 
+    hist0 = jnp.zeros((telemetry_rounds + 1, 4), jnp.float32)
+
     def body(carry):
-        st, it, rlx, msg, _ = carry
+        st, it, rlx, msg, _, hist = carry
         new, upd = relax_ell(
             ell,
             st,
@@ -168,22 +183,24 @@ def voronoi_cells_pallas(
             interpret=interpret,
         )
         ch = jnp.any(upd)
-        return (
-            new,
-            it + 1,
-            rlx + jnp.sum(upd).astype(jnp.float32),
-            msg + jnp.sum(jnp.where(upd, deg, 0.0)),
-            ch,
-        )
+        imp = jnp.sum(upd).astype(jnp.float32)
+        dmsg = jnp.sum(jnp.where(upd, deg, 0.0))
+        hist = _hist_write(hist, it, _round_row(imp, dmsg, imp, new.dist))
+        return (new, it + 1, rlx + imp, msg + dmsg, ch, hist)
 
     def cond(carry):
-        _, it, _, _, ch = carry
+        _, it, _, _, ch, _ = carry
         return ch & (it < cap)
 
-    st, iters, rlx, msg, _ = jax.lax.while_loop(
-        cond, body, (st0, jnp.int32(0), 0.0, 0.0, jnp.bool_(True))
+    st, iters, rlx, msg, _, hist = jax.lax.while_loop(
+        cond, body, (st0, jnp.int32(0), 0.0, 0.0, jnp.bool_(True), hist0)
     )
-    return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+    return st, VoronoiStats(
+        iterations=iters,
+        relaxations=rlx,
+        messages=msg,
+        history=hist if telemetry_rounds > 0 else None,
+    )
 
 
 @functools.partial(
@@ -194,6 +211,7 @@ def voronoi_cells_pallas(
         "src_block",
         "interpret",
         "max_iters",
+        "telemetry_rounds",
     ),
 )
 def voronoi_cells_pallas_frontier(
@@ -205,6 +223,7 @@ def voronoi_cells_pallas_frontier(
     src_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     max_iters: Optional[int] = None,
+    telemetry_rounds: int = 0,
 ) -> tuple[VoronoiState, VoronoiStats]:
     """Top-K compacted Voronoi cells over dense Pallas tiles.
 
@@ -238,9 +257,10 @@ def voronoi_cells_pallas_frontier(
     exp0 = jnp.isin(ell.row2v, seeds)
     pull0 = jnp.zeros((R,), jnp.bool_)
     prio0 = jnp.full((R,), INF, jnp.float32)
+    hist0 = jnp.zeros((telemetry_rounds + 1, 4), jnp.float32)
 
     def body(carry):
-        st, pull, prio, exp, it, rlx, msg = carry
+        st, pull, prio, exp, it, rlx, msg, hist = carry
         # --- priority: pull at the marker's distance, expand at own dist
         p = jnp.minimum(
             jnp.where(pull, prio, INF),
@@ -288,15 +308,24 @@ def voronoi_cells_pallas_frontier(
         prio = jnp.minimum(prio, prio_v[ell.row2v])
         # --- every row of an improved vertex needs (re-)expansion
         exp = exp | upd[ell.row2v]
-        rlx = rlx + jnp.sum(upd).astype(jnp.float32)
-        msg = msg + jnp.sum(jnp.isfinite(twgt)).astype(jnp.float32)
-        return new, pull, prio, exp, it + 1, rlx, msg
+        imp = jnp.sum(upd).astype(jnp.float32)
+        dmsg = jnp.sum(jnp.isfinite(twgt)).astype(jnp.float32)
+        # frontier = dirty rows actually popped this round
+        hist = _hist_write(
+            hist, it, _round_row(jnp.sum(sel), dmsg, imp, new.dist)
+        )
+        return new, pull, prio, exp, it + 1, rlx + imp, msg + dmsg, hist
 
     def cond(carry):
-        _, pull, _, exp, it, _, _ = carry
+        _, pull, _, exp, it, _, _, _ = carry
         return (jnp.any(pull) | jnp.any(exp)) & (it < cap)
 
-    st, _, _, _, iters, rlx, msg = jax.lax.while_loop(
-        cond, body, (st0, pull0, prio0, exp0, jnp.int32(0), 0.0, 0.0)
+    st, _, _, _, iters, rlx, msg, hist = jax.lax.while_loop(
+        cond, body, (st0, pull0, prio0, exp0, jnp.int32(0), 0.0, 0.0, hist0)
     )
-    return st, VoronoiStats(iterations=iters, relaxations=rlx, messages=msg)
+    return st, VoronoiStats(
+        iterations=iters,
+        relaxations=rlx,
+        messages=msg,
+        history=hist if telemetry_rounds > 0 else None,
+    )

@@ -1,0 +1,72 @@
+"""CLI validator for obs artifacts: ``python -m repro.obs validate``.
+
+CI's traced-solve smoke step runs a frontier solve with ``--trace`` /
+``--metrics`` and then calls this to assert the Chrome trace is
+schema-clean (monotonic ts, paired B/E or complete X events) and the
+Prometheus dump parses.  Exit 0 on success, 1 with a reason on stderr
+otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .metrics import parse_prometheus
+from .trace import validate_chrome_trace
+
+
+def _cmd_validate(args: argparse.Namespace) -> int:
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        n = validate_chrome_trace(doc)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"trace validation failed: {e}", file=sys.stderr)
+        return 1
+    print(f"trace ok: {n} events")
+
+    if args.metrics is not None:
+        try:
+            with open(args.metrics) as f:
+                samples = parse_prometheus(f.read())
+        except (OSError, ValueError) as e:
+            print(f"metrics validation failed: {e}", file=sys.stderr)
+            return 1
+        if not samples:
+            print("metrics validation failed: no samples", file=sys.stderr)
+            return 1
+        print(f"metrics ok: {len(samples)} samples")
+
+    if args.require_span:
+        names = {ev.get("name") for ev in doc.get("traceEvents", doc)}
+        missing = [s for s in args.require_span if s not in names]
+        if missing:
+            print(f"missing required spans: {missing}", file=sys.stderr)
+            return 1
+        print(f"required spans present: {args.require_span}")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pv = sub.add_parser("validate", help="validate a Chrome trace (+ metrics)")
+    pv.add_argument("trace", help="Chrome trace-event JSON file")
+    pv.add_argument("--metrics", help="Prometheus text-exposition file")
+    pv.add_argument(
+        "--require-span",
+        action="append",
+        default=None,
+        help="span name that must appear in the trace (repeatable)",
+    )
+    pv.set_defaults(fn=_cmd_validate)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

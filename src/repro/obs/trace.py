@@ -1,0 +1,185 @@
+"""Span tracer with Chrome trace-event JSON export.
+
+Spans are recorded as *complete* ("X") events — one record per span with
+``ts``/``dur`` in microseconds — which Perfetto and ``chrome://tracing``
+load directly.  Counter ("C") events carry per-round convergence series
+(frontier size, messages, relaxations, unreached residual) so the
+paper-§VI curves render as tracks under the solve span.
+
+Two recording styles coexist:
+
+  with tracer.span("solve", mode="frontier"): ...   # live timing
+  tracer.add_span("round", t0, t1, round=3, ...)    # retroactive
+
+Retroactive spans matter in two places where a context manager cannot
+sit: the serve engine's queue-wait (the span *starts* at submit() but is
+only known to have ended at flush()), and per-round solve telemetry
+(rounds happen inside one compiled ``while_loop``; their host-visible
+timestamps are synthesized after the fact and flagged
+``synthetic_timing`` in the event args).
+
+Like :mod:`repro.obs.metrics`, this module is stdlib-only — no jax
+import — so the graphstore CLI can trace ingestion on machines where the
+accelerator stack is absent.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class Tracer:
+    """Accumulates trace events; thread-safe appends, one export at end."""
+
+    def __init__(self, process_name: str = "repro") -> None:
+        self._events: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self._process_name = process_name
+
+    def _us(self, t: float) -> float:
+        return (t - self._t0) * 1e6
+
+    @contextlib.contextmanager
+    def span(self, name: str, tid: int = 0, **args):
+        """Times a block; records one X event when it exits (even on error)."""
+        start = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.add_span(name, start, time.perf_counter(), tid=tid, **args)
+
+    def add_span(
+        self, name: str, t_start: float, t_end: float, tid: int = 0, **args
+    ) -> None:
+        """Records a span from ``time.perf_counter()`` stamps taken earlier."""
+        ev = {
+            "name": name,
+            "ph": "X",
+            "ts": self._us(t_start),
+            "dur": max(0.0, (t_end - t_start) * 1e6),
+            "pid": 0,
+            "tid": tid,
+        }
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def add_counter(
+        self, name: str, t: float, values: Dict[str, float], tid: int = 0
+    ) -> None:
+        """Records a counter sample (renders as a track of stacked series)."""
+        ev = {
+            "name": name,
+            "ph": "C",
+            "ts": self._us(t),
+            "pid": 0,
+            "tid": tid,
+            "args": {k: float(v) for k, v in values.items()},
+        }
+        with self._lock:
+            self._events.append(ev)
+
+    def add_instant(self, name: str, tid: int = 0, **args) -> None:
+        ev = {
+            "name": name,
+            "ph": "i",
+            "s": "t",
+            "ts": self._us(time.perf_counter()),
+            "pid": 0,
+            "tid": tid,
+        }
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def now(self) -> float:
+        """Timestamp source for add_span/add_counter (perf_counter)."""
+        return time.perf_counter()
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._events)
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """The JSON-object trace format: sorted events + process metadata."""
+        meta = [
+            {
+                "name": "process_name",
+                "ph": "M",
+                "pid": 0,
+                "tid": 0,
+                "args": {"name": self._process_name},
+            }
+        ]
+        events = sorted(self.events(), key=lambda e: e["ts"])
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+
+def validate_chrome_trace(doc: Any) -> int:
+    """Schema check for a Chrome trace document; returns the event count.
+
+    Accepts either the JSON-object format (``{"traceEvents": [...]}``)
+    or a bare event array.  Raises ValueError on: missing/negative
+    ``ts``, negative ``dur``, non-monotonic ``ts`` ordering within the
+    array, unpaired B/E events per (pid, tid), or unknown phases.
+    """
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("object-format trace missing 'traceEvents' list")
+    elif isinstance(doc, list):
+        events = doc
+    else:
+        raise ValueError(f"trace must be an object or array, got {type(doc)}")
+
+    open_stacks: Dict[Any, List[str]] = {}
+    prev_ts: Optional[float] = None
+    n = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i}: not an object")
+        ph = ev.get("ph")
+        if ph not in ("X", "B", "E", "C", "M", "i", "I"):
+            raise ValueError(f"event {i}: unknown phase {ph!r}")
+        if ph == "M":
+            continue  # metadata events carry no timestamp contract
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            raise ValueError(f"event {i}: bad ts {ts!r}")
+        if prev_ts is not None and ts < prev_ts:
+            raise ValueError(
+                f"event {i}: ts {ts} < previous {prev_ts} (not monotonic)"
+            )
+        prev_ts = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"event {i}: X event bad dur {dur!r}")
+        elif ph == "B":
+            open_stacks.setdefault((ev.get("pid"), ev.get("tid")), []).append(
+                ev.get("name", "")
+            )
+        elif ph == "E":
+            stack = open_stacks.get((ev.get("pid"), ev.get("tid")), [])
+            if not stack:
+                raise ValueError(f"event {i}: E without matching B")
+            stack.pop()
+        n += 1
+    leftovers = {k: v for k, v in open_stacks.items() if v}
+    if leftovers:
+        raise ValueError(f"unclosed B events: {leftovers}")
+    return n

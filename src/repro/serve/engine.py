@@ -32,8 +32,10 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.graph import Graph
 from repro.core.tree import tree_edge_sets
+from repro.obs import MetricsRegistry
 from repro.serve import plan as planmod
 from repro.solver import SolverConfig, SteinerSolver
 
@@ -165,20 +167,42 @@ class SteinerServer:
         # batch raised): delivered by the next flush instead of being
         # lost with the exception
         self._ready: Dict[int, QueryResult] = {}
-        # counters (latency reservoirs bounded: the server is long-lived);
-        # cache hits are ready at batch assembly while fresh solves wait
-        # for the executable, so the two populations get separate streams
-        self._lat_fresh: "collections.deque[float]" = collections.deque(
-            maxlen=16384
+        # Service counters live on a PER-SERVER MetricsRegistry (always
+        # on, independent of the global repro.obs switch — stats() must
+        # work on a server that never called obs.enable(), and two
+        # servers in one process must not share counters).  Histogram
+        # reservoirs are bounded (newest 16384): cache hits are ready at
+        # batch assembly while fresh solves wait for the executable, so
+        # the two latency populations get separate streams.
+        self.metrics = MetricsRegistry()
+        self._m_completed = self.metrics.counter(
+            "serve_queries_completed_total", "queries answered (fresh + cached)"
         )
-        self._lat_cached: "collections.deque[float]" = collections.deque(
-            maxlen=16384
+        self._m_hits = self.metrics.counter(
+            "serve_cache_hits_total", "queries answered from the LRU result cache"
         )
-        self._completed = 0
-        self._cache_hits = 0
-        self._lanes_run = 0
-        self._lanes_padded = 0
-        self._batches: Dict[int, int] = {b: 0 for b in config.buckets}
+        self._m_lanes = self.metrics.counter(
+            "serve_lanes_run_total", "micro-batch lanes launched (incl. padding)"
+        )
+        self._m_padded = self.metrics.counter(
+            "serve_lanes_padded_total", "inert padding lanes launched"
+        )
+        self._m_lat = {
+            path: self.metrics.histogram(
+                "serve_latency_seconds",
+                "submit-to-result latency of one query",
+                labels={"path": path},
+            )
+            for path in ("fresh", "cached")
+        }
+        self._m_batches = {
+            b: self.metrics.counter(
+                "serve_batches_total",
+                "fixed-shape micro-batches executed",
+                labels={"bucket": str(b)},
+            )
+            for b in config.buckets
+        }
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -226,7 +250,8 @@ class SteinerServer:
                 planmod.pad_seed_set((min(u, v), max(u, v)), b),
                 (self._handle.config.batch_size, 1),
             )
-            self._execute(b, batch)
+            with obs.span("serve:warmup", bucket=b):
+                self._execute(b, batch)
 
     def _execute(
         self, bucket: int, seed_batch: np.ndarray, n_real: Optional[int] = None
@@ -270,6 +295,7 @@ class SteinerServer:
                 lanes: List[np.ndarray] = []
                 lane_of: Dict[Tuple[int, ...], int] = {}
                 riders: List[Tuple[_Pending, Optional[QueryResult]]] = []
+                t_assemble = time.perf_counter()
                 while queue and len(lanes) < B:
                     p = queue.popleft()
                     hit = self.cache.get(p.plan.key)
@@ -279,15 +305,36 @@ class SteinerServer:
                     riders.append((p, hit))
                 t_assembled = time.perf_counter()
                 t_done = t_assembled
+                if obs.tracing():
+                    obs.add_span(
+                        "serve:assemble",
+                        t_assemble,
+                        t_assembled,
+                        bucket=bucket,
+                        lanes=len(lanes),
+                        riders=len(riders),
+                    )
+                    # retroactive queue-wait span per ticket in this batch
+                    for p, _ in riders:
+                        obs.add_span(
+                            "serve:queue_wait",
+                            p.t_submit,
+                            t_assembled,
+                            ticket=p.ticket,
+                            bucket=bucket,
+                        )
                 fresh_by_key: Dict[Tuple[int, ...], QueryResult] = {}
                 if lanes:
                     n_real = len(lanes)
                     while len(lanes) < B:  # inert batch-dim padding
                         lanes.append(lanes[0])
                     try:
-                        totals, nedges, edges = self._execute(
-                            bucket, np.stack(lanes), n_real
-                        )
+                        with obs.span(
+                            "serve:solve", bucket=bucket, lanes=n_real
+                        ):
+                            totals, nedges, edges = self._execute(
+                                bucket, np.stack(lanes), n_real
+                            )
                     except Exception:
                         # the riders were already popped — put them back
                         # (original order) and stash the results of the
@@ -299,9 +346,9 @@ class SteinerServer:
                         self._ready = out
                         raise
                     t_done = time.perf_counter()
-                    self._batches[bucket] += 1
-                    self._lanes_run += B
-                    self._lanes_padded += B - n_real
+                    self._m_batches[bucket].inc()
+                    self._m_lanes.inc(B)
+                    self._m_padded.inc(B - n_real)
                     for key, i in lane_of.items():
                         fresh = QueryResult(
                             key=key,
@@ -314,21 +361,29 @@ class SteinerServer:
                         )
                         fresh_by_key[key] = fresh
                         self.cache.put(key, fresh)
+                t_stash = time.perf_counter()
                 for p, hit in riders:
                     if hit is None:
                         hit = fresh_by_key[p.plan.key]
                         from_cache = False
                     else:
                         from_cache = True
-                    self._cache_hits += from_cache
-                    self._completed += 1
+                    if from_cache:
+                        self._m_hits.inc()
+                    self._m_completed.inc()
                     # hits were ready at assembly; only fresh lanes waited
                     # for the batch execute
                     lat = (t_assembled if from_cache else t_done) - p.t_submit
-                    (self._lat_cached if from_cache else self._lat_fresh).append(
-                        lat
-                    )
+                    self._m_lat["cached" if from_cache else "fresh"].observe(lat)
                     out[p.ticket] = hit.with_latency(lat, from_cache)
+                if obs.tracing():
+                    obs.add_span(
+                        "serve:stash",
+                        t_stash,
+                        time.perf_counter(),
+                        bucket=bucket,
+                        results=len(riders),
+                    )
                 self._t_last = t_done
         return out
 
@@ -366,7 +421,9 @@ class SteinerServer:
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        """Service counters.
+        """Service counters — a dict view over the per-server registry
+        (``self.metrics``; :meth:`prometheus_text` exposes the same
+        series in scrape format).
 
         Latency percentiles are ``None`` until the matching population
         has served at least one query — an idle server reports no
@@ -376,42 +433,49 @@ class SteinerServer:
         orders of magnitude, so one merged stream is misleading).
         """
 
-        def pcts(d):
-            if not d:
+        def pcts(vals):
+            if not vals:
                 return None, None
-            lat = np.asarray(list(d))
+            lat = np.asarray(vals)
             return (
                 float(np.percentile(lat, 50) * 1e3),
                 float(np.percentile(lat, 99) * 1e3),
             )
 
-        all_lat = list(self._lat_fresh) + list(self._lat_cached)
-        p50, p99 = pcts(all_lat)
-        fresh_p50, fresh_p99 = pcts(self._lat_fresh)
-        cached_p50, cached_p99 = pcts(self._lat_cached)
+        fresh = self._m_lat["fresh"].values()
+        cached = self._m_lat["cached"].values()
+        p50, p99 = pcts(fresh + cached)
+        fresh_p50, fresh_p99 = pcts(fresh)
+        cached_p50, cached_p99 = pcts(cached)
+        completed = int(self._m_completed.value)
+        cache_hits = int(self._m_hits.value)
+        lanes_run = int(self._m_lanes.value)
+        lanes_padded = int(self._m_padded.value)
         span = (
             (self._t_last - self._t_first)
             if (self._t_first is not None and self._t_last is not None)
             else 0.0
         )
         return {
-            "completed": self._completed,
-            "cache_hits": self._cache_hits,
-            "cache_hit_rate": (
-                self._cache_hits / self._completed if self._completed else 0.0
-            ),
+            "completed": completed,
+            "cache_hits": cache_hits,
+            "cache_hit_rate": (cache_hits / completed if completed else 0.0),
             "cache_entries": len(self.cache),
-            "qps": self._completed / span if span > 0 else 0.0,
+            "qps": completed / span if span > 0 else 0.0,
             "latency_p50_ms": p50,
             "latency_p99_ms": p99,
             "fresh_p50_ms": fresh_p50,
             "fresh_p99_ms": fresh_p99,
             "cached_p50_ms": cached_p50,
             "cached_p99_ms": cached_p99,
-            "lanes_run": self._lanes_run,
-            "lanes_padded": self._lanes_padded,
-            "pad_waste": (
-                self._lanes_padded / self._lanes_run if self._lanes_run else 0.0
-            ),
-            "batches_per_bucket": dict(self._batches),
+            "lanes_run": lanes_run,
+            "lanes_padded": lanes_padded,
+            "pad_waste": (lanes_padded / lanes_run if lanes_run else 0.0),
+            "batches_per_bucket": {
+                b: int(c.value) for b, c in self._m_batches.items()
+            },
         }
+
+    def prometheus_text(self) -> str:
+        """This server's counters in Prometheus text exposition format."""
+        return self.metrics.prometheus_text()

@@ -31,6 +31,7 @@ from typing import TYPE_CHECKING, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.graph import Graph
 from repro.solver.config import SolverConfig
 from repro.solver.registry import SolveOutput, get_backend
@@ -107,7 +108,39 @@ class PreparedGraph:
                     f"got shape {seeds.shape}"
                 )
             num_seeds = int(seeds.shape[0])
-        return self._backend.solve(self.config, self._artifacts, seeds, num_seeds)
+        if not obs.enabled():
+            return self._backend.solve(
+                self.config, self._artifacts, seeds, num_seeds
+            )
+        cfg = self.config
+        t0 = obs.now()
+        with obs.span(
+            "solve", backend=self.backend, mode=cfg.mode, num_seeds=num_seeds
+        ):
+            out = self._backend.solve(cfg, self._artifacts, seeds, num_seeds)
+        t1 = obs.now()
+        hist = obs.histogram(
+            "solver_solve_seconds",
+            "wall time of one PreparedGraph.solve",
+            labels={"backend": self.backend, "mode": cfg.mode},
+        )
+        if hist is not None:
+            hist.observe(t1 - t0)
+        if out.telemetry is not None:
+            ctr = obs.counter(
+                "solver_messages_total",
+                "candidate transmissions attempted across solves",
+                labels={"backend": self.backend, "mode": cfg.mode},
+            )
+            if ctr is not None:
+                ctr.inc(out.telemetry.messages)
+            obs.emit_round_telemetry(
+                out.telemetry.per_round,
+                t0,
+                t1,
+                label=f"{self.backend}/{cfg.mode}",
+            )
+        return out
 
 
 class SteinerSolver:
@@ -126,5 +159,8 @@ class SteinerSolver:
         an on-disk :class:`repro.graphstore.GraphStore`; stores are
         materialized / shard-loaded by the backend exactly once here.
         """
-        artifacts = self._backend.prepare(self.config, graph)
+        with obs.span(
+            "prepare", backend=self.config.backend, mode=self.config.mode
+        ):
+            artifacts = self._backend.prepare(self.config, graph)
         return PreparedGraph(self.config, self._backend, graph, artifacts)

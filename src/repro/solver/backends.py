@@ -29,12 +29,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import steiner as smod
 from repro.core import voronoi as vmod
 from repro.core.graph import EllGraph, Graph, ell_view_cached
 from repro.kernels.minplus import ops as kops
 from repro.solver.config import BACKEND_MODES, SolverConfig
-from repro.solver.registry import SolveOutput, register_backend
+from repro.solver.registry import (
+    SolveOutput,
+    SolveTelemetry,
+    register_backend,
+    telemetry_from_counts,
+)
 
 # ----------------------------------------------------------------------------
 # Trace bookkeeping — every jit trace of a solver executable bumps a counter,
@@ -63,9 +69,14 @@ def trace_count(key: Optional[str] = None) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_seeds", "mode", "mst_algo", "max_iters")
+    jax.jit,
+    static_argnames=(
+        "num_seeds", "mode", "mst_algo", "max_iters", "telemetry_rounds"
+    ),
 )
-def _exec_single_coo(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
+def _exec_single_coo(
+    g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters, telemetry_rounds
+):
     _bump("single")
     return smod.run_pipeline(
         g,
@@ -75,19 +86,28 @@ def _exec_single_coo(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
         mst_algo=mst_algo,
         delta=delta,
         max_iters=max_iters,
+        telemetry_rounds=telemetry_rounds,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_seeds", "mst_algo", "frontier_size", "max_iters"),
+    static_argnames=(
+        "num_seeds", "mst_algo", "frontier_size", "max_iters",
+        "telemetry_rounds",
+    ),
 )
 def _exec_single_frontier(
-    g, ell, seeds, *, num_seeds, mst_algo, frontier_size, max_iters
+    g, ell, seeds, *, num_seeds, mst_algo, frontier_size, max_iters,
+    telemetry_rounds,
 ):
     _bump("single")
     st, stats = vmod.voronoi_cells_frontier(
-        ell, seeds, frontier_size=frontier_size, max_rounds=max_iters
+        ell,
+        seeds,
+        frontier_size=frontier_size,
+        max_rounds=max_iters,
+        telemetry_rounds=telemetry_rounds,
     )
     return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
 
@@ -104,6 +124,7 @@ def _pallas_voronoi(ell, seeds, cfg_kw):
             src_block=cfg_kw["src_block"],
             interpret=cfg_kw["interpret"],
             max_iters=cfg_kw["max_iters"],
+            telemetry_rounds=cfg_kw["telemetry_rounds"],
         )
     return kops.voronoi_cells_pallas(
         ell,
@@ -112,6 +133,7 @@ def _pallas_voronoi(ell, seeds, cfg_kw):
         src_block=cfg_kw["src_block"],
         interpret=cfg_kw["interpret"],
         max_iters=cfg_kw["max_iters"],
+        telemetry_rounds=cfg_kw["telemetry_rounds"],
     )
 
 
@@ -126,6 +148,7 @@ def _pallas_voronoi(ell, seeds, cfg_kw):
         "frontier",
         "frontier_size",
         "max_iters",
+        "telemetry_rounds",
     ),
 )
 def _exec_single_pallas(
@@ -141,6 +164,7 @@ def _exec_single_pallas(
     frontier,
     frontier_size,
     max_iters,
+    telemetry_rounds,
 ):
     _bump("single")
     st, stats = _pallas_voronoi(
@@ -153,6 +177,7 @@ def _exec_single_pallas(
             src_block=src_block,
             interpret=interpret,
             max_iters=max_iters,
+            telemetry_rounds=telemetry_rounds,
         ),
     )
     return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
@@ -169,6 +194,7 @@ def _exec_single_pallas(
         "frontier",
         "frontier_size",
         "max_iters",
+        "telemetry_rounds",
     ),
 )
 def _exec_batch_pallas(
@@ -184,6 +210,7 @@ def _exec_batch_pallas(
     frontier,
     frontier_size,
     max_iters,
+    telemetry_rounds,
 ):
     _bump("batch")
     kw = dict(
@@ -193,6 +220,7 @@ def _exec_batch_pallas(
         src_block=src_block,
         interpret=interpret,
         max_iters=max_iters,
+        telemetry_rounds=telemetry_rounds,
     )
 
     def one(row):
@@ -215,13 +243,19 @@ def _pallas_static_kw(cfg: SolverConfig) -> dict:
         frontier=cfg.pallas_frontier,
         frontier_size=cfg.frontier_size,
         max_iters=cfg.max_iters,
+        telemetry_rounds=cfg.telemetry_rounds,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_seeds", "mode", "mst_algo", "max_iters")
+    jax.jit,
+    static_argnames=(
+        "num_seeds", "mode", "mst_algo", "max_iters", "telemetry_rounds"
+    ),
 )
-def _exec_batch(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
+def _exec_batch(
+    g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters, telemetry_rounds
+):
     _bump("batch")
 
     def one(row):
@@ -233,6 +267,7 @@ def _exec_batch(g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters):
             mst_algo=mst_algo,
             delta=delta,
             max_iters=max_iters,
+            telemetry_rounds=telemetry_rounds,
         )
 
     return jax.vmap(one)(seeds)
@@ -291,13 +326,16 @@ class _Backend:
         """
         g, store = _as_graph_and_store(g)
         if store is not None:
-            art: dict = {"graph": store.to_graph(), "store": store}
+            with obs.span("prepare:materialize", backend=self.name):
+                art: dict = {"graph": store.to_graph(), "store": store}
             if cfg.mode in self.ell_modes:
-                art["ell"] = store.ell(cfg.ell_width)
+                with obs.span("prepare:ell_build", backend=self.name):
+                    art["ell"] = store.ell(cfg.ell_width)
             return art
         art = {"graph": g}
         if cfg.mode in self.ell_modes:
-            art["ell"] = ell_view_cached(g, cfg.ell_width)
+            with obs.span("prepare:ell_build", backend=self.name):
+                art["ell"] = ell_view_cached(g, cfg.ell_width)
         return art
 
 
@@ -317,6 +355,13 @@ class SingleBackend(_Backend):
             total_distance=float(res.tree.total_distance),
             num_edges=int(res.tree.num_edges),
             raw=res,
+            telemetry=telemetry_from_counts(
+                res.stats.iterations,
+                res.stats.relaxations,
+                res.stats.messages,
+                res.stats.history,
+                cfg.telemetry_rounds,
+            ),
         )
 
     def solve_raw(
@@ -341,6 +386,7 @@ class SingleBackend(_Backend):
                 mst_algo=cfg.mst_algo,
                 frontier_size=cfg.frontier_size,
                 max_iters=cfg.max_iters,
+                telemetry_rounds=cfg.telemetry_rounds,
             )
         if cfg.mode == "pallas":
             if ell is None:
@@ -361,6 +407,7 @@ class SingleBackend(_Backend):
             mst_algo=cfg.mst_algo,
             delta=cfg.delta,
             max_iters=cfg.max_iters,
+            telemetry_rounds=cfg.telemetry_rounds,
         )
 
 
@@ -376,10 +423,27 @@ class BatchBackend(_Backend):
         res = self.solve_raw(
             cfg, artifacts["graph"], seeds, num_seeds, ell=artifacts.get("ell")
         )
+        # Lane aggregation: iterations = slowest lane, counters = sums.
+        # The vmapped while_loop freezes converged lanes' carries, so a
+        # lane-sum of the (B, H+1, 4) histories only accumulates rows
+        # each lane actually wrote.
+        stats = res.stats
+        iters = int(np.max(np.asarray(stats.iterations)))
+        per_round = None
+        if stats.history is not None and cfg.telemetry_rounds > 0:
+            hist = np.asarray(stats.history).sum(axis=0)
+            per_round = hist[: min(iters, cfg.telemetry_rounds)]
+        telem = SolveTelemetry(
+            iterations=iters,
+            relaxations=int(round(float(np.sum(np.asarray(stats.relaxations))))),
+            messages=int(round(float(np.sum(np.asarray(stats.messages))))),
+            per_round=per_round,
+        )
         return SolveOutput(
             total_distance=np.asarray(res.tree.total_distance),
             num_edges=np.asarray(res.tree.num_edges),
             raw=res,
+            telemetry=telem,
         )
 
     def solve_raw(
@@ -412,6 +476,7 @@ class BatchBackend(_Backend):
             mst_algo=cfg.mst_algo,
             delta=cfg.delta,
             max_iters=cfg.max_iters,
+            telemetry_rounds=cfg.telemetry_rounds,
         )
 
 
@@ -482,24 +547,28 @@ class Mesh1DBackend(_Backend):
                 and (meta["n_replica"], meta["n_blocks"]) == (n_replica, n_blocks)
                 and meta.get("ell", {}).get("k") == cfg.ell_width
             ):
-                ellpart = store.load_partition_ell()
+                with obs.span("prepare:shard_load", backend=self.name):
+                    ellpart = store.load_partition_ell()
             else:
+                with obs.span("prepare:partition", backend=self.name):
+                    ellpart = partition_ell(
+                        store.ell(cfg.ell_width),
+                        n_replica=n_replica,
+                        n_blocks=n_blocks,
+                    )
+            graph_art = store
+        else:
+            with obs.span("prepare:partition", backend=self.name):
                 ellpart = partition_ell(
-                    store.ell(cfg.ell_width),
+                    ell_view_cached(g, cfg.ell_width),
                     n_replica=n_replica,
                     n_blocks=n_blocks,
                 )
-            graph_art = store
-        else:
-            ellpart = partition_ell(
-                ell_view_cached(g, cfg.ell_width),
-                n_replica=n_replica,
-                n_blocks=n_blocks,
-            )
             graph_art = g
-        edges = _place_edges(
-            mesh, (ellpart.nbr, ellpart.wgt, ellpart.row2v), ("data", "model")
-        )
+        with obs.span("prepare:place", backend=self.name):
+            edges = _place_edges(
+                mesh, (ellpart.nbr, ellpart.wgt, ellpart.row2v), ("data", "model")
+            )
         return {
             "graph": graph_art,
             "mesh": mesh,
@@ -525,16 +594,19 @@ class Mesh1DBackend(_Backend):
             ):
                 # per-shard load of the prebuilt partition: the full edge
                 # list is never expanded on the host
-                part = store.load_partition()
+                with obs.span("prepare:shard_load", backend=self.name):
+                    part = store.load_partition()
             else:
-                cs, cd, cw = store.coo()  # already both directions
-                part = partition_edges(
-                    cs, cd, cw, store.n,
-                    n_replica=n_replica, n_blocks=n_blocks, symmetrize=False,
+                with obs.span("prepare:partition", backend=self.name):
+                    cs, cd, cw = store.coo()  # already both directions
+                    part = partition_edges(
+                        cs, cd, cw, store.n,
+                        n_replica=n_replica, n_blocks=n_blocks, symmetrize=False,
+                    )
+            with obs.span("prepare:place", backend=self.name):
+                edges = _place_edges(
+                    mesh, (part.src, part.dst, part.w), ("data", "model")
                 )
-            edges = _place_edges(
-                mesh, (part.src, part.dst, part.w), ("data", "model")
-            )
             return {
                 "graph": store,
                 "mesh": mesh,
@@ -544,18 +616,20 @@ class Mesh1DBackend(_Backend):
             }
         # g is already symmetric + padded; padding edges (0, 0, +inf) stay
         # inert through the partition (they can never win a relaxation)
-        part = partition_edges(
-            np.asarray(g.src),
-            np.asarray(g.dst),
-            np.asarray(g.w),
-            g.n,
-            n_replica=n_replica,
-            n_blocks=n_blocks,
-            symmetrize=False,
-        )
-        edges = _place_edges(
-            mesh, (part.src, part.dst, part.w), ("data", "model")
-        )
+        with obs.span("prepare:partition", backend=self.name):
+            part = partition_edges(
+                np.asarray(g.src),
+                np.asarray(g.dst),
+                np.asarray(g.w),
+                g.n,
+                n_replica=n_replica,
+                n_blocks=n_blocks,
+                symmetrize=False,
+            )
+        with obs.span("prepare:place", backend=self.name):
+            edges = _place_edges(
+                mesh, (part.src, part.dst, part.w), ("data", "model")
+            )
         return {
             "graph": g,
             "mesh": mesh,
@@ -580,6 +654,13 @@ class Mesh1DBackend(_Backend):
             total_distance=res.total_distance,
             num_edges=res.num_edges,
             raw=res,
+            telemetry=telemetry_from_counts(
+                res.iterations,
+                res.relaxations,
+                res.messages,
+                res.history,
+                cfg.telemetry_rounds,
+            ),
         )
 
     def solve_prepared(
@@ -631,6 +712,7 @@ class Mesh1DBackend(_Backend):
                 fuse_gather=cfg.fuse_gather,
                 lab_i16=cfg.lab_i16,
                 frontier_size=cfg.frontier_size,
+                telemetry_rounds=cfg.telemetry_rounds,
             )
             fn = make_dist_steiner(
                 mesh, dcfg, vert_axis=vert_axis, replica_axes=replica_axes
@@ -666,15 +748,18 @@ class Mesh2DBackend(_Backend):
                 and meta.get("scheme") == "2d"
                 and (meta["R"], meta["C"]) == (R, C)
             ):
-                part = store.load_partition_2d()
+                with obs.span("prepare:shard_load", backend=self.name):
+                    part = store.load_partition_2d()
             else:
-                cs, cd, cw = store.coo()
-                part = partition_edges_2d(
-                    cs, cd, cw, store.n, R=R, C=C, symmetrize=False
+                with obs.span("prepare:partition", backend=self.name):
+                    cs, cd, cw = store.coo()
+                    part = partition_edges_2d(
+                        cs, cd, cw, store.n, R=R, C=C, symmetrize=False
+                    )
+            with obs.span("prepare:place", backend=self.name):
+                edges = _place_edges(
+                    mesh, (part.src_row, part.dst_col, part.w), ("data", "model")
                 )
-            edges = _place_edges(
-                mesh, (part.src_row, part.dst_col, part.w), ("data", "model")
-            )
             return {
                 "graph": store,
                 "mesh": mesh,
@@ -682,18 +767,20 @@ class Mesh2DBackend(_Backend):
                 "edges": edges,
                 "executables": {},
             }
-        part = partition_edges_2d(
-            np.asarray(g.src),
-            np.asarray(g.dst),
-            np.asarray(g.w),
-            g.n,
-            R=R,
-            C=C,
-            symmetrize=False,
-        )
-        edges = _place_edges(
-            mesh, (part.src_row, part.dst_col, part.w), ("data", "model")
-        )
+        with obs.span("prepare:partition", backend=self.name):
+            part = partition_edges_2d(
+                np.asarray(g.src),
+                np.asarray(g.dst),
+                np.asarray(g.w),
+                g.n,
+                R=R,
+                C=C,
+                symmetrize=False,
+            )
+        with obs.span("prepare:place", backend=self.name):
+            edges = _place_edges(
+                mesh, (part.src_row, part.dst_col, part.w), ("data", "model")
+            )
         return {
             "graph": g,
             "mesh": mesh,
@@ -715,6 +802,13 @@ class Mesh2DBackend(_Backend):
             total_distance=res.total_distance,
             num_edges=res.num_edges,
             raw=res,
+            telemetry=telemetry_from_counts(
+                res.iterations,
+                res.relaxations,
+                res.messages,
+                res.history,
+                cfg.telemetry_rounds,
+            ),
         )
 
     def solve_prepared(
@@ -747,6 +841,7 @@ class Mesh2DBackend(_Backend):
                 delta=cfg.delta,
                 row_axis=row_axis,
                 col_axis=col_axis,
+                telemetry_rounds=cfg.telemetry_rounds,
             )
             _bump("mesh2d")
             if executables is not None:

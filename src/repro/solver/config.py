@@ -75,6 +75,13 @@ class SolverConfig:
         only — paper §V-F).
       fuse_gather: pack (dist, lab) into one f32 all-gather (mesh1d).
       lab_i16: gather labels as int16 (mesh1d, |S| < 32768).
+      telemetry_rounds: static H — every fixpoint loop carries a
+        (H+1, 4) per-round telemetry buffer (``repro.obs.ROUND_CHANNELS``
+        rows: frontier, messages, relaxations, unreached), surfaced as
+        ``SolveOutput.telemetry.per_round``.  Rounds beyond H spill into
+        the last slot (aggregate counters stay exact).  0 disables the
+        buffer entirely.  H is baked into the executable, so toggling
+        the host-side obs recorder never retraces or changes trees.
     """
 
     backend: str = "single"
@@ -98,6 +105,8 @@ class SolverConfig:
     pair_chunks: int = 1
     fuse_gather: bool = True
     lab_i16: bool = False
+    # per-round telemetry buffer depth (0 disables)
+    telemetry_rounds: int = 256
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -127,6 +136,11 @@ class SolverConfig:
             v = getattr(self, name)
             if not (isinstance(v, int) and v >= 1):
                 raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if not (isinstance(self.telemetry_rounds, int) and self.telemetry_rounds >= 0):
+            raise ValueError(
+                f"telemetry_rounds must be an int >= 0, "
+                f"got {self.telemetry_rounds!r}"
+            )
         if self.src_block is not None and not (
             isinstance(self.src_block, int) and self.src_block >= 1
         ):

@@ -20,9 +20,61 @@ Register with ``@register_backend("name")``; look up with
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
 
 _REGISTRY: Dict[str, Any] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveTelemetry:
+    """Uniform convergence telemetry of one solve (the paper's §VI
+    per-rank measurements, backend-independent).
+
+    Every backend used to expose these only through its native ``raw``
+    result, with backend-dependent dtypes (the mesh/pallas paths carried
+    f32 counters).  Here they are plain Python ints regardless of
+    backend; for the "batch" backend they aggregate over lanes
+    (iterations = max, messages/relaxations = sum).  Counters ride the
+    device loops as f32, exact for values < 2**24 (~16.7M) per solve.
+
+    Attributes:
+      iterations: global relaxation rounds until the fixpoint.
+      relaxations: vertex-state improvements across all rounds.
+      messages: candidate transmissions attempted ("messages", Fig. 6).
+      per_round: (R, 4) f32 array, one row per round in
+        ``repro.obs.ROUND_CHANNELS`` order (frontier, messages,
+        relaxations, unreached), R = min(iterations,
+        config.telemetry_rounds); None when telemetry_rounds=0.
+        Batch solves sum the buffer across lanes (converged lanes stop
+        writing, so short lanes contribute zero rows).
+    """
+
+    iterations: int
+    relaxations: int
+    messages: int
+    per_round: Optional[np.ndarray] = None
+
+
+def telemetry_from_counts(
+    iterations, relaxations, messages, history, telemetry_rounds: int
+) -> SolveTelemetry:
+    """Builds a :class:`SolveTelemetry` from loop-carried counters.
+
+    ``history`` is the raw (H+1, 4) device buffer (or None); the spill
+    slot and rows beyond the round count are trimmed here, on the host.
+    """
+    iters = int(iterations)
+    per_round = None
+    if history is not None and telemetry_rounds > 0:
+        per_round = np.asarray(history)[: min(iters, telemetry_rounds)]
+    return SolveTelemetry(
+        iterations=iters,
+        relaxations=int(round(float(relaxations))),
+        messages=int(round(float(messages))),
+        per_round=per_round,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,12 +87,16 @@ class SolveOutput:
       num_edges: |E_S| — int, or (B,) int ndarray for "batch".
       raw: the backend-native result for callers that need the full
         state (``SteinerResult`` for single/batch lanes,
-        ``DistSteinerResult`` for the mesh engines).
+        ``DistSteinerResult`` for the mesh engines).  Digging convergence
+        counters out of ``raw`` is deprecated — read ``telemetry``.
+      telemetry: uniform :class:`SolveTelemetry` (Python-int counters +
+        optional per-round buffer) across every backend.
     """
 
     total_distance: Any
     num_edges: Any
     raw: Any
+    telemetry: Optional[SolveTelemetry] = None
 
 
 def register_backend(name: str):

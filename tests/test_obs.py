@@ -1,0 +1,466 @@
+"""Observability: metrics/trace units, zero-cost-when-disabled solver
+integration, uniform telemetry parity, serve spans, CLI flags.
+
+The load-bearing guarantees:
+
+  * enabling obs never changes trees, counters, or executable counts —
+    per-round telemetry rides every fixpoint loop unconditionally, so
+    the toggle is host-side only (asserted bit-for-bit below);
+  * ``SolveOutput.telemetry`` is the one uniform counter surface across
+    all backends (Python ints; mesh/pallas f32 raws normalized), and its
+    per-round rows sum exactly to the aggregate counters.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import from_edges
+from repro.obs import (
+    MetricsRegistry,
+    Tracer,
+    parse_prometheus,
+    validate_chrome_trace,
+)
+from repro.obs.__main__ import main as obs_main
+from repro.solver import SolverConfig, SteinerSolver, trace_count
+
+from helpers import random_instance
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MSG = obs.ROUND_CHANNELS.index("messages")
+RELAX = obs.ROUND_CHANNELS.index("relaxations")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    """Every test starts and ends with obs disabled and empty."""
+    obs.reset()
+    yield
+    obs.reset()
+
+
+def _instance(trial):
+    src, dst, w, n, seeds, edges = random_instance(trial)
+    return from_edges(src, dst, w, n, pad_to=8), n, seeds
+
+
+# ----------------------------------------------------------------------------
+# metrics.py units
+# ----------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "total requests")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    g = reg.gauge("depth")
+    g.set(7)
+    g.inc(-2)
+    assert g.value == 5.0
+    h = reg.histogram("lat_seconds")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.count == 4 and h.sum == 10.0
+    assert h.percentile(50) == 2.5
+    assert h.values() == (1.0, 2.0, 3.0, 4.0)
+
+
+def test_counter_rejects_negative_increment():
+    with pytest.raises(ValueError, match="only go up"):
+        MetricsRegistry().counter("c_total").inc(-1)
+
+
+def test_registry_get_or_create_and_kind_binding():
+    reg = MetricsRegistry()
+    assert reg.counter("x_total") is reg.counter("x_total")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("bad-name")
+    # label variants are distinct series under one name
+    a = reg.counter("by_mode_total", labels={"mode": "a"})
+    b = reg.counter("by_mode_total", labels={"mode": "b"})
+    assert a is not b and len(reg.series("by_mode_total")) == 2
+
+
+def test_prometheus_text_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("solves_total", "completed solves").inc(41)
+    reg.gauge("queue_depth").set(3)
+    h = reg.histogram("lat_seconds", labels={"path": "fresh"})
+    h.observe(0.5)
+    h.observe(1.5)
+    samples = parse_prometheus(reg.prometheus_text())
+    assert samples["solves_total"] == 41
+    assert samples["queue_depth"] == 3
+    assert samples['lat_seconds_count{path="fresh"}'] == 2
+    assert samples['lat_seconds_sum{path="fresh"}'] == 2.0
+    assert 'lat_seconds{path="fresh",quantile="0.5"}' in samples
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError, match="not a Prometheus sample"):
+        parse_prometheus("this is { not a sample\n")
+    with pytest.raises(ValueError, match="bad sample value"):
+        parse_prometheus("x_total twelve\n")
+
+
+# ----------------------------------------------------------------------------
+# trace.py units
+# ----------------------------------------------------------------------------
+
+
+def test_tracer_span_export_and_validate(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", mode="frontier"):
+        t0 = tr.now()
+        tr.add_instant("checkpoint")
+    tr.add_span("retro", t0, tr.now(), round=0)
+    tr.add_counter("convergence", tr.now(), {"frontier": 5.0})
+    path = tmp_path / "trace.json"
+    tr.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    assert validate_chrome_trace(doc) == 4
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "process_name" in names and "outer" in names and "retro" in names
+
+
+def test_validate_rejects_bad_traces():
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome_trace([{"ph": "Z", "ts": 0.0}])
+    with pytest.raises(ValueError, match="not monotonic"):
+        validate_chrome_trace(
+            [{"ph": "i", "ts": 5.0}, {"ph": "i", "ts": 1.0}]
+        )
+    with pytest.raises(ValueError, match="unclosed B"):
+        validate_chrome_trace([{"ph": "B", "ts": 0.0, "name": "x"}])
+    with pytest.raises(ValueError, match="E without matching B"):
+        validate_chrome_trace([{"ph": "E", "ts": 0.0}])
+
+
+# ----------------------------------------------------------------------------
+# obs module switch — everything is inert until enable()
+# ----------------------------------------------------------------------------
+
+
+def test_disabled_by_default_everything_noops(tmp_path):
+    assert not obs.enabled() and not obs.tracing()
+    assert obs.counter("x_total") is None
+    assert obs.gauge("x") is None and obs.histogram("x_s") is None
+    assert obs.span("a") is obs.span("b")  # shared no-op object
+    with obs.span("never-recorded"):
+        pass
+    obs.add_span("retro", 0.0, 1.0)
+    obs.emit_round_telemetry(np.ones((2, 4)), 0.0, 1.0, label="x")
+    assert obs.prometheus_text() == ""
+    assert obs.export_chrome_trace(str(tmp_path / "t.json")) is False
+
+
+def test_enable_disable_keeps_data():
+    obs.enable()
+    obs.counter("kept_total").inc(5)
+    obs.disable()
+    assert obs.counter("kept_total") is None  # no new recording
+    assert "kept_total 5" in obs.registry().prometheus_text()
+    obs.enable()  # idempotent re-enable keeps the registry
+    assert obs.counter("kept_total").value == 5
+
+
+# ----------------------------------------------------------------------------
+# solver integration — enabling obs is invisible to the computation
+# ----------------------------------------------------------------------------
+
+OBS_SPECS = [
+    ("single", "dense"),
+    ("single", "bucket"),
+    ("single", "frontier"),
+    ("single", "pallas"),
+    ("batch", "bucket"),
+    ("mesh1d", "bucket"),
+    ("mesh1d", "frontier"),
+    ("mesh2d", "bucket"),
+]
+
+
+@pytest.mark.parametrize("backend,mode", OBS_SPECS)
+def test_enable_is_bit_identical_and_never_retraces(backend, mode):
+    g, n, seeds = _instance(1)
+    cfg = SolverConfig(backend=backend, mode=mode, mesh_shape=(1, 1))
+    handle = SteinerSolver(cfg).prepare(g)
+    if backend == "batch":
+        seeds = np.stack([seeds, np.roll(seeds, 1)])
+    off = handle.solve(seeds)
+    base = trace_count()
+    obs.enable()
+    on = handle.solve(seeds)
+    assert trace_count() == base, "obs toggle must not build new executables"
+    assert np.array_equal(
+        np.asarray(off.total_distance), np.asarray(on.total_distance)
+    )
+    assert np.array_equal(np.asarray(off.num_edges), np.asarray(on.num_edges))
+    assert on.telemetry.iterations == off.telemetry.iterations
+    assert on.telemetry.messages == off.telemetry.messages
+    assert on.telemetry.relaxations == off.telemetry.relaxations
+
+
+@pytest.mark.parametrize(
+    "backend,mode",
+    [
+        ("single", "bucket"),
+        ("single", "frontier"),
+        ("single", "pallas"),
+        ("mesh1d", "bucket"),
+        ("mesh1d", "frontier"),
+        ("mesh2d", "bucket"),
+    ],
+)
+def test_telemetry_matches_raw_counters(backend, mode):
+    """SolveOutput.telemetry replaces digging through backend-native raw."""
+    g, n, seeds = _instance(0)
+    cfg = SolverConfig(backend=backend, mode=mode, mesh_shape=(1, 1))
+    out = SteinerSolver(cfg).prepare(g).solve(seeds)
+    t = out.telemetry
+    assert isinstance(t.iterations, int)
+    assert isinstance(t.messages, int) and isinstance(t.relaxations, int)
+    if backend == "single":
+        raw_it = out.raw.stats.iterations
+        raw_msg, raw_rx = out.raw.stats.messages, out.raw.stats.relaxations
+    else:
+        raw_it = out.raw.iterations
+        raw_msg, raw_rx = out.raw.messages, out.raw.relaxations
+    assert t.iterations == int(raw_it)
+    assert t.messages == int(round(float(raw_msg)))
+    assert t.relaxations == int(round(float(raw_rx)))
+    # per-round rows (ROUND_CHANNELS order) sum exactly to the aggregates
+    assert t.per_round is not None and t.per_round.shape == (t.iterations, 4)
+    assert int(t.per_round[:, MSG].sum()) == t.messages
+    assert int(t.per_round[:, RELAX].sum()) == t.relaxations
+
+
+def test_batch_telemetry_aggregates_lanes():
+    g, n, _ = _instance(0)
+    rng = np.random.default_rng(7)
+    lanes = np.stack(
+        [rng.choice(n, size=5, replace=False) for _ in range(2)]
+    ).astype(np.int32)
+    out = (
+        SteinerSolver(SolverConfig(backend="batch", mode="bucket"))
+        .prepare(g)
+        .solve(lanes)
+    )
+    singles = [
+        SteinerSolver(SolverConfig(backend="single", mode="bucket"))
+        .prepare(g)
+        .solve(lane)
+        for lane in lanes
+    ]
+    t = out.telemetry
+    assert t.iterations == max(s.telemetry.iterations for s in singles)
+    assert t.messages == sum(s.telemetry.messages for s in singles)
+    assert t.relaxations == sum(s.telemetry.relaxations for s in singles)
+    assert t.per_round.shape == (t.iterations, 4)
+    assert int(t.per_round[:, MSG].sum()) == t.messages
+
+
+def test_telemetry_rounds_spill_and_zero():
+    g, n, seeds = _instance(2)
+    full = (
+        SteinerSolver(SolverConfig(backend="single", mode="bucket"))
+        .prepare(g)
+        .solve(seeds)
+    )
+    iters = full.telemetry.iterations
+    assert iters > 3  # the grid instance needs many rounds
+    # H smaller than the round count: buffer truncates, aggregates exact
+    small = (
+        SteinerSolver(
+            SolverConfig(backend="single", mode="bucket", telemetry_rounds=3)
+        )
+        .prepare(g)
+        .solve(seeds)
+    )
+    assert small.telemetry.iterations == iters
+    assert small.telemetry.messages == full.telemetry.messages
+    assert small.telemetry.per_round.shape == (3, 4)
+    assert np.array_equal(small.telemetry.per_round, full.telemetry.per_round[:3])
+    # H=0: no buffer at all, identical trees and counters
+    off = (
+        SteinerSolver(
+            SolverConfig(backend="single", mode="bucket", telemetry_rounds=0)
+        )
+        .prepare(g)
+        .solve(seeds)
+    )
+    assert off.telemetry.per_round is None
+    assert off.total_distance == full.total_distance
+    assert off.telemetry.messages == full.telemetry.messages
+
+
+def test_solve_emits_spans_and_convergence_tracks(tmp_path):
+    g, n, seeds = _instance(1)
+    obs.enable()
+    handle = SteinerSolver(
+        SolverConfig(backend="single", mode="frontier")
+    ).prepare(g)
+    handle.solve(seeds)
+    path = tmp_path / "trace.json"
+    assert obs.export_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    assert validate_chrome_trace(doc) > 0
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "prepare" in names and "solve" in names
+    assert "prepare:ell_build" in names
+    assert any(n.startswith("round[") for n in names)
+    assert any(n.startswith("convergence[") for n in names)
+    rounds = [
+        e for e in doc["traceEvents"] if e["name"].startswith("round[")
+    ]
+    assert all(e["args"]["synthetic_timing"] for e in rounds)
+    samples = parse_prometheus(obs.prometheus_text())
+    assert any(k.startswith("solver_messages_total") for k in samples)
+    assert any(k.startswith("solver_solve_seconds_count") for k in samples)
+
+
+# ----------------------------------------------------------------------------
+# serve integration — registry-backed stats + per-query spans
+# ----------------------------------------------------------------------------
+
+
+def test_serve_stats_match_prometheus_dump():
+    from repro.serve import ServeConfig, SteinerServer
+
+    g, n, _ = _instance(0)
+    srv = SteinerServer(
+        g, ServeConfig(buckets=(8,), max_batch=4, cache_capacity=16)
+    )
+    rng = np.random.default_rng(0)
+    q1 = rng.choice(n, size=4, replace=False).tolist()
+    q2 = rng.choice(n, size=4, replace=False).tolist()
+    srv.submit(q1)
+    srv.submit(q2)
+    srv.flush()
+    srv.submit(q1)  # repeat → cache path
+    srv.flush()
+    st = srv.stats()
+    samples = parse_prometheus(srv.prometheus_text())
+    assert st["completed"] == 3
+    assert samples["serve_queries_completed_total"] == st["completed"]
+    assert samples["serve_cache_hits_total"] == st["cache_hits"]
+    assert samples['serve_batches_total{bucket="8"}'] == sum(
+        st["batches_per_bucket"].values()
+    )
+    assert samples["serve_lanes_run_total"] == st["lanes_run"]
+
+
+def test_serve_emits_query_spans():
+    from repro.serve import ServeConfig, SteinerServer
+
+    g, n, _ = _instance(0)
+    obs.enable()
+    srv = SteinerServer(
+        g, ServeConfig(buckets=(8,), max_batch=4, cache_capacity=16)
+    )
+    rng = np.random.default_rng(1)
+    srv.submit(rng.choice(n, size=4, replace=False).tolist())
+    srv.flush()
+    names = {e["name"] for e in obs.tracer().events()}
+    assert {
+        "serve:queue_wait",
+        "serve:assemble",
+        "serve:solve",
+        "serve:stash",
+    } <= names
+    assert validate_chrome_trace(obs.tracer().chrome_trace()) > 0
+
+
+# ----------------------------------------------------------------------------
+# CLI surfaces — graphstore flags and the obs validator
+# ----------------------------------------------------------------------------
+
+
+def _run_graphstore(args):
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.graphstore", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+
+
+def test_graphstore_cli_json_and_quiet(tmp_path):
+    store = tmp_path / "g.gstore"
+    r = _run_graphstore(
+        ["--json", "build", str(store), "--source", "rmat",
+         "--scale", "6", "--edge-factor", "4"]
+    )
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(r.stdout)  # stdout is exactly one JSON document
+    assert doc["cmd"] == "build" and doc["m_directed"] > 0
+    assert "built" in r.stderr  # progress rides the logger on stderr
+
+    r = _run_graphstore(
+        ["--json", "--quiet", "partition", str(store), "--blocks", "2"]
+    )
+    assert r.returncode == 0 and r.stderr == ""
+    doc = json.loads(r.stdout)
+    assert doc["cmd"] == "partition" and doc["shards"] == 2
+    assert doc["meta"]["scheme"] == "1d"
+
+    r = _run_graphstore(["--json", "--quiet", "info", str(store)])
+    assert r.returncode == 0 and r.stderr == ""
+    doc = json.loads(r.stdout)
+    assert doc["partition"]["scheme"] == "1d"
+    assert doc["degree"]["max"] >= doc["degree"]["min"]
+
+
+def test_graphstore_cli_trace_and_metrics(tmp_path):
+    store = tmp_path / "g.gstore"
+    trace = tmp_path / "trace.json"
+    metrics = tmp_path / "metrics.txt"
+    r = _run_graphstore(
+        ["--quiet", "--trace", str(trace), "--metrics", str(metrics),
+         "build", str(store), "--source", "rmat",
+         "--scale", "6", "--edge-factor", "4"]
+    )
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(trace.read_text())
+    assert validate_chrome_trace(doc) > 0
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "ingest:build_store" in names
+    assert "ingest:pass1_degrees" in names and "ingest:chunk" in names
+    samples = parse_prometheus(metrics.read_text())
+    assert samples["graphstore_ingest_edges_total"] > 0
+
+
+def test_obs_cli_validate(tmp_path):
+    tr = Tracer()
+    with tr.span("build"):
+        pass
+    trace = tmp_path / "t.json"
+    tr.export_chrome(str(trace))
+    reg = MetricsRegistry()
+    reg.counter("x_total").inc(2)
+    metrics = tmp_path / "m.txt"
+    metrics.write_text(reg.prometheus_text())
+    ok = obs_main(
+        ["validate", str(trace), "--metrics", str(metrics),
+         "--require-span", "build"]
+    )
+    assert ok == 0
+    assert obs_main(["validate", str(trace), "--require-span", "nope"]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([{"ph": "Z", "ts": 0.0}]))
+    assert obs_main(["validate", str(bad)]) == 1
+    metrics.write_text("not { prometheus\n")
+    assert obs_main(["validate", str(trace), "--metrics", str(metrics)]) == 1
