@@ -178,18 +178,54 @@ def to_ell(g: Graph, k: int, *, pad_rows_to: int = 1) -> EllGraph:
 _ELL_MEMO_CAP = 16
 _ell_memo: "dict[tuple[int, int], tuple[weakref.ref, EllGraph]]" = {}
 
+# Per-Graph version tokens: a process-unique, never-reused integer per
+# (graph object, mutation epoch).  ``id(g)`` is NOT a safe cache key — a
+# garbage-collected Graph's id can be handed to a brand-new Graph, and a
+# memo keyed on it would serve the dead graph's ELL view for the new one.
+# Tokens are drawn from a monotonic counter and stashed on the instance,
+# so they can never alias; the delta layer bumps them when it mutates a
+# graph's arrays in place (see :func:`bump_graph_version`).
+_token_counter = 0
+
+
+def graph_token(g: Graph) -> int:
+    """The graph's current version token (assigned lazily, never reused)."""
+    tok = getattr(g, "_version_token", None)
+    if tok is None:
+        global _token_counter
+        _token_counter += 1
+        tok = _token_counter
+        object.__setattr__(g, "_version_token", tok)
+    return tok
+
+
+def bump_graph_version(g: Graph) -> int:
+    """Assigns a fresh token, invalidating every memoized view of ``g``.
+
+    Callers that mutate a graph's buffers in place (the delta overlay
+    layer, when it reweights a resident COO array) must bump so stale ELL
+    views cannot be served; building a *new* Graph object needs no bump —
+    fresh objects get fresh tokens.
+    """
+    global _token_counter
+    _token_counter += 1
+    object.__setattr__(g, "_version_token", _token_counter)
+    return _token_counter
+
 
 def ell_view_cached(g: Graph, k: int) -> EllGraph:
-    """Memoized :func:`to_ell` keyed on ``(id(g), k)``.
+    """Memoized :func:`to_ell` keyed on ``(graph_token(g), k)``.
 
     ``to_ell`` is O(E) host Python — far more expensive than the solve it
-    feeds when queries repeat against one resident graph.  The memo holds
-    only a weak reference to ``g`` (so retiring a graph frees its O(E)
-    arrays and views) and validates it against the ``id()`` key, which may
-    be reused after garbage collection; the table is bounded at
-    ``_ELL_MEMO_CAP`` entries (FIFO eviction).
+    feeds when queries repeat against one resident graph.  The key is the
+    per-Graph version token (process-unique, never reused — unlike
+    ``id()``, which the allocator recycles), so a new graph can never hit
+    a dead graph's entry and a version bump drops stale views.  The memo
+    holds only a weak reference to ``g`` (so retiring a graph frees its
+    O(E) arrays and views); the table is bounded at ``_ELL_MEMO_CAP``
+    entries (FIFO eviction).
     """
-    key = (id(g), int(k))
+    key = (graph_token(g), int(k))
     hit = _ell_memo.get(key)
     if hit is not None and hit[0]() is g:
         return hit[1]
@@ -199,7 +235,7 @@ def ell_view_cached(g: Graph, k: int) -> EllGraph:
 
     def _drop(ref, key=key):
         # collected graph → free its view immediately; guard against the
-        # key having been rebound to a new graph with a reused id()
+        # slot having been rebound (bounded-table eviction + re-insert)
         cur = _ell_memo.get(key)
         if cur is not None and cur[0] is ref:
             del _ell_memo[key]

@@ -80,6 +80,7 @@ def run_pipeline(
     delta: Optional[float] = None,
     max_iters: Optional[int] = None,
     telemetry_rounds: int = 0,
+    init: Optional[vmod.VoronoiState] = None,
 ) -> SteinerResult:
     """Unjitted full pipeline over the COO graph (modes "dense"/"bucket").
 
@@ -89,7 +90,9 @@ def run_pipeline(
     (``_exec_batch``); :func:`steiner_tree` and
     :func:`repro.serve.batch.steiner_tree_batch` are shims over those.
     ``telemetry_rounds`` (static) sizes the per-round telemetry buffer
-    returned as ``result.stats.history`` (0 → None).
+    returned as ``result.stats.history`` (0 → None).  ``init`` warm-starts
+    the Voronoi relaxation (see ``voronoi_cells`` for the soundness
+    contract — used by the delta layer's affected-cell re-solve).
     """
     S = int(num_seeds if num_seeds is not None else seeds.shape[0])
     st, stats = vmod.voronoi_cells(
@@ -99,6 +102,7 @@ def run_pipeline(
         delta=delta,
         max_iters=max_iters,
         telemetry_rounds=telemetry_rounds,
+        init=init,
     )
     return finish_pipeline(g, st, stats, S, mst_algo)
 

@@ -1,0 +1,58 @@
+"""repro.delta — log-structured edge deltas over ``.gstore`` graphs.
+
+A mutated graph is its base CSR plus an ordered, crash-safe, checksummed
+log of ``add`` / ``delete`` / ``reweight`` records (:mod:`.log`), folded
+at open into a COO overlay (:mod:`.overlay`) that every ``GraphStore``
+view applies transparently.  :func:`compact` (:mod:`.compact`) folds the
+log back into a fresh base store — atomically, with incremental
+maintenance of persisted shards — and :mod:`.resolve` turns a previous
+epoch's converged Voronoi state into a sound warm start for re-solving
+only the delta-affected cells.  :class:`IncrementalSession`
+(:mod:`.incremental`) keeps the solve resident across epochs — in-place
+ELL row surgery, warm frontier re-solve, and exact pair-table repair —
+so each epoch costs work proportional to the affected region while
+staying bit-identical to a cold solve of the mutated store.
+"""
+
+from repro.delta.compact import CompactStats, compact
+from repro.delta.incremental import (
+    EllPatcher,
+    EpochResult,
+    IncrementalSession,
+    effective_adjacency,
+)
+from repro.delta.log import (
+    OP_ADD,
+    OP_DELETE,
+    OP_REWEIGHT,
+    DeltaSegment,
+    append_deltas,
+    read_segment,
+    read_segments,
+    segment_name,
+)
+from repro.delta.overlay import DeltaOverlay, fold_overlay, pair_key
+from repro.delta.resolve import affected_cells, entry_survives, reset_affected
+
+__all__ = [
+    "OP_ADD",
+    "OP_DELETE",
+    "OP_REWEIGHT",
+    "CompactStats",
+    "DeltaOverlay",
+    "DeltaSegment",
+    "EllPatcher",
+    "EpochResult",
+    "IncrementalSession",
+    "affected_cells",
+    "effective_adjacency",
+    "append_deltas",
+    "compact",
+    "entry_survives",
+    "fold_overlay",
+    "pair_key",
+    "read_segment",
+    "read_segments",
+    "reset_affected",
+    "segment_name",
+]

@@ -1,0 +1,494 @@
+"""Work-proportional delta re-solve — incremental ELL surgery + tree repair.
+
+The warm-start loop (:func:`~repro.delta.resolve.reset_affected` feeding
+``voronoi_cells_frontier(init=...)``) already bounds *relaxation* work by
+the affected region, but two O(E) stages remained on every epoch: the
+effective-CSR/ELL rebuild after an append (``refresh()``), and the full
+finish pipeline — an O(E) cross-edge rescan — to turn the repaired state
+back into a tree.  This module removes both, completing the Sun et al.
+partition-and-merge idea (PAPERS.md) in the dynamic setting: per-epoch
+cost proportional to the change, not the graph.
+
+* :class:`EllPatcher` — in-place ELL row surgery.  Only the changed
+  vertices' rows are refilled from the base CSR slices plus the overlay;
+  spare padding rows (``SolverConfig.ell_pad_rows``) absorb degree
+  growth, so the device arrays keep their compiled shape and the jitted
+  frontier executable stays valid with zero retraces.
+
+* :class:`IncrementalSession` — the full epoch loop: patch the ELL,
+  reset the affected cells, run warm frontier rounds, then repair the
+  S² pair tables by recomputing ONLY the rows of affected cells from
+  edges incident to their members, splicing them into the cached
+  tables, and redoing the tiny S-vertex MST + predecessor walk.  Every
+  arithmetic step mirrors the cold pipeline's lexicographic tie-breaks
+  and f32 rounding, so the repaired tree is bit-identical to a cold
+  solve of the mutated store.
+
+Soundness of the pair-table repair: let ``T`` be the touched set — every
+vertex whose (dist, lab, pred) changed plus every delta-record endpoint.
+A candidate bridge can appear, disappear, or change value ONLY if one of
+its endpoints is in T (an unchanged edge between two untouched vertices
+contributes the same (d', u, v) triple as before).  Hence, per pair:
+
+* cached winner's endpoints ∉ T — the winner triple is still a valid
+  candidate and still the lexicographic minimum of the *unchanged*
+  candidates, so the exact new entry is ``lexmin(cached, best
+  T-incident candidate)`` — a two-way merge against the pair table of
+  edges incident to T (O(deg T) work).
+* cached winner's endpoint ∈ T (a "dirty" pair) — the runner-up among
+  unchanged candidates was never cached, so the pair's row cells are
+  recomputed exactly from every edge incident to their member vertices,
+  then the T-merge is applied on top (idempotent: T-candidates are a
+  subset of all candidates).
+
+Dirty pairs cluster around the perturbed region, so the exact-recompute
+member set stays proportional to the delta even when large cells gain or
+lose a few boundary vertices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mst as mstmod
+from repro.core import tree as treemod
+from repro.core import voronoi as vmod
+from repro.core.graph import EllGraph
+from repro.delta.log import append_deltas
+from repro.delta.resolve import reset_affected
+
+IMAX = np.int32(np.iinfo(np.int32).max)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_rows(nbr, wgt, row2v, rows, nb, wg, vb):
+    """Fused in-place ELL row update (donated buffers — no full copy)."""
+    return (
+        nbr.at[rows].set(nb),
+        wgt.at[rows].set(wg),
+        row2v.at[rows].set(vb),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("S", "mst_algo"))
+def _finish_tables(st, dmat, umat, vmat, S: int, mst_algo: str):
+    """Repaired pair tables → MST → pruning → walk, exactly the cold
+    pipeline's tail (:func:`repro.core.steiner.finish_pipeline` minus the
+    O(E) distance-graph reduction, which the caller repaired instead)."""
+    wmat = dmat.reshape(S, S)
+    wmat = jnp.minimum(wmat, wmat.T)
+    wmat = jnp.where(jnp.eye(S, dtype=bool), jnp.inf, wmat)
+    if mst_algo == "prim":
+        parent = mstmod.prim_dense(wmat)
+    else:
+        parent = mstmod.boruvka_dense(wmat)
+    n = st.dist.shape[0]
+    tree = treemod.extract_tree(n, st, dmat, umat, vmat, parent, S)
+    return parent, tree.total_distance, tree.num_edges
+
+
+def effective_adjacency(
+    store, verts: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Directed effective out-edges of ``verts`` — (src, dst, w).
+
+    Base CSR slices are gathered per vertex and filtered/reweighted
+    through the overlay; surviving added edges incident to ``verts`` are
+    appended (both orientations).  Work is O(deg(verts) + |adds|), never
+    O(E) — this is what lets the epoch loop avoid ``effective_csr()``.
+    """
+    verts = np.asarray(verts, np.int64)
+    indptr = store.indptr
+    starts = np.asarray(indptr[verts], np.int64)
+    cnt = np.asarray(indptr[verts + 1], np.int64) - starts
+    total = int(cnt.sum())
+    if total:
+        out_off = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+        idx = (
+            np.arange(total, dtype=np.int64)
+            - np.repeat(out_off, cnt)
+            + np.repeat(starts, cnt)
+        )
+        src = np.repeat(verts, cnt)
+        dst = np.asarray(store.indices[idx], np.int64)
+        w = np.asarray(store.weights[idx], np.float32)
+    else:
+        src = np.empty(0, np.int64)
+        dst = np.empty(0, np.int64)
+        w = np.empty(0, np.float32)
+    ov = store.overlay
+    if ov is not None:
+        src, dst, w = ov.apply_base_chunk(src, dst, w)
+        if ov.add_u.size:
+            m1 = np.isin(ov.add_u, verts)
+            m2 = np.isin(ov.add_v, verts)
+            src = np.concatenate(
+                [src, ov.add_u[m1].astype(np.int64), ov.add_v[m2].astype(np.int64)]
+            )
+            dst = np.concatenate(
+                [dst, ov.add_v[m1].astype(np.int64), ov.add_u[m2].astype(np.int64)]
+            )
+            w = np.concatenate([w, ov.add_w[m1], ov.add_w[m2]]).astype(np.float32)
+    return src, dst, w
+
+
+class EllPatcher:
+    """In-place ELL row maintenance for a delta-mutated store.
+
+    Owns the row layout the ELL was built with (``row_off`` from the
+    prepare-time effective CSR) plus explicit bookkeeping of which
+    padding rows are still free — padding rows alias ``row2v == 0``, so
+    they are NOT discoverable from the :class:`EllGraph` alone.  Each
+    :meth:`apply` refills exactly the changed vertices' rows (claiming
+    spare rows when a vertex outgrows its block) and scatters the small
+    host blocks into the resident device arrays, preserving shape.
+    """
+
+    def __init__(self, ell: EllGraph, indptr: np.ndarray):
+        self.ell = ell
+        k = int(ell.nbr.shape[1])
+        self.k = k
+        counts = np.diff(np.asarray(indptr, np.int64))
+        rows_per_v = np.maximum(1, -(-counts // k))
+        self.row_off = np.zeros(counts.size + 1, np.int64)
+        np.cumsum(rows_per_v, out=self.row_off[1:])
+        self._free_next = int(self.row_off[-1])
+        self._padded = int(ell.nbr.shape[0])
+        self._extra: Dict[int, List[int]] = {}
+
+    @property
+    def free_rows(self) -> int:
+        """Spare padding rows still claimable for degree growth."""
+        return self._padded - self._free_next
+
+    def apply(self, store, changed: np.ndarray) -> EllGraph:
+        """Refills the ELL rows of ``changed`` vertices from the store's
+        current effective adjacency; returns the patched (same-shape)
+        :class:`EllGraph` and retains it as ``self.ell``.
+
+        Raises:
+          RuntimeError: a vertex outgrew its rows and no padding rows are
+            left (``ell_pad_rows`` too small for the accumulated deltas)
+            — compact the store and re-prepare instead.
+        """
+        changed = np.unique(np.asarray(changed, np.int64))
+        if changed.size == 0:
+            return self.ell
+        src, dst, w = effective_adjacency(store, changed)
+        order = np.argsort(src, kind="stable")
+        src, dst, w = src[order], dst[order], w[order]
+        bounds = np.searchsorted(src, changed)
+        bounds = np.append(bounds, src.size)
+
+        k = self.k
+        all_rows: List[np.ndarray] = []
+        nbr_blk: List[np.ndarray] = []
+        wgt_blk: List[np.ndarray] = []
+        v_of_blk: List[np.ndarray] = []
+        for i, v in enumerate(changed):
+            lo, hi = int(bounds[i]), int(bounds[i + 1])
+            deg = hi - lo
+            vi = int(v)
+            rows = list(range(int(self.row_off[vi]), int(self.row_off[vi + 1])))
+            rows += self._extra.get(vi, [])
+            need = max(1, -(-deg // k))
+            while len(rows) < need:
+                if self._free_next >= self._padded:
+                    raise RuntimeError(
+                        f"ELL padding exhausted patching vertex {vi} "
+                        f"(needs {need} rows, {len(rows)} assigned, 0 free); "
+                        f"compact() the store and re-prepare, or raise "
+                        f"SolverConfig.ell_pad_rows"
+                    )
+                self._extra.setdefault(vi, []).append(self._free_next)
+                rows.append(self._free_next)
+                self._free_next += 1
+            r = len(rows)
+            nb = np.zeros(r * k, np.int32)
+            wg = np.full(r * k, np.inf, np.float32)
+            nb[:deg] = dst[lo:hi]
+            wg[:deg] = w[lo:hi]
+            all_rows.append(np.asarray(rows, np.int32))
+            nbr_blk.append(nb.reshape(r, k))
+            wgt_blk.append(wg.reshape(r, k))
+            v_of_blk.append(np.full(r, vi, np.int32))
+
+        rows = np.concatenate(all_rows)
+        nb = np.concatenate(nbr_blk)
+        wg = np.concatenate(wgt_blk)
+        vb = np.concatenate(v_of_blk)
+        # bucket the scatter size to a power of two so the donated jit
+        # executable is reused across epochs; padding repeats row 0's
+        # write verbatim (duplicate identical writes are inert)
+        r = rows.shape[0]
+        cap = max(16, 1 << (r - 1).bit_length())
+        pad = cap - r
+        if pad:
+            rows = np.concatenate([rows, np.full(pad, rows[0], np.int32)])
+            nb = np.concatenate([nb, np.repeat(nb[:1], pad, axis=0)])
+            wg = np.concatenate([wg, np.repeat(wg[:1], pad, axis=0)])
+            vb = np.concatenate([vb, np.full(pad, vb[0], np.int32)])
+        ell = self.ell
+        new_nbr, new_wgt, new_row2v = _scatter_rows(
+            ell.nbr, ell.wgt, ell.row2v,
+            jnp.asarray(rows), jnp.asarray(nb), jnp.asarray(wg),
+            jnp.asarray(vb),
+        )
+        new = EllGraph(nbr=new_nbr, wgt=new_wgt, row2v=new_row2v, n=ell.n)
+        self.ell = new
+        return new
+
+
+@dataclasses.dataclass
+class EpochResult:
+    """Outcome of one :meth:`IncrementalSession.resolve` epoch."""
+
+    epoch: int
+    total_distance: float
+    num_edges: int
+    changed_vertices: int
+    affected_cells: int
+    vertices_reset: int
+    cells_recomputed: int
+    member_vertices: int
+    iterations: int
+    relaxations: int
+    messages: int
+
+
+class IncrementalSession:
+    """Epoch-incremental Steiner re-solve over a mutating ``GraphStore``.
+
+    Holds the converged solve of the current epoch (state, S² pair
+    tables, MST, totals) plus a patchable resident ELL.  Each
+    :meth:`resolve` advances to the store's current epoch doing work
+    proportional to the delta: ELL row surgery, affected-cell warm
+    frontier rounds, and a spliced pair-table/MST/walk repair — bit-
+    identical to a cold solve of the mutated store (asserted in
+    tests/test_delta.py and by the perf_ingest delta bench).
+
+    The one-time construction cost IS a cold solve (plus one O(E) pair
+    reduction to seed the tables); everything after is incremental.
+    """
+
+    def __init__(
+        self,
+        store,
+        seeds,
+        *,
+        ell_width: int = 32,
+        ell_pad_rows: int = 1,
+        frontier_size: int = 1024,
+        mst_algo: str = "prim",
+    ):
+        self.store = store
+        self.frontier_size = frontier_size
+        self.mst_algo = mst_algo
+        seeds = store.map_ids(np.asarray(seeds)).astype(np.int64)
+        self.seeds = seeds
+        self.S = int(seeds.shape[0])
+        self._seeds_j = jnp.asarray(seeds, jnp.int32)
+
+        if store.overlay is None:
+            indptr = np.asarray(store.indptr)
+        else:
+            indptr = store.effective_csr()[0]
+        ell = store.ell(ell_width, pad_rows_to=ell_pad_rows)
+        self.patcher = EllPatcher(ell, indptr)
+
+        st, stats = vmod.voronoi_cells_frontier(
+            ell, self._seeds_j, frontier_size=frontier_size
+        )
+        self.state = st
+        self._finish_cold(st)
+        self.last = EpochResult(
+            epoch=int(store.epoch),
+            total_distance=self.total_distance,
+            num_edges=self.num_edges,
+            changed_vertices=0,
+            affected_cells=0,
+            vertices_reset=0,
+            cells_recomputed=self.S,
+            member_vertices=int(np.asarray(st.dist).shape[0]),
+            iterations=int(stats.iterations),
+            relaxations=int(stats.relaxations),
+            messages=int(stats.messages),
+        )
+
+    # ------------------------------------------------------------------
+    # cold bootstrap: one full pair reduction to seed the cached tables
+    # ------------------------------------------------------------------
+
+    def _finish_cold(self, st) -> None:
+        n = int(np.asarray(st.dist).shape[0])
+        verts = np.arange(n, dtype=np.int64)
+        src, dst, w = effective_adjacency(self.store, verts)
+        dmat, umat, vmat = self._pair_rows(src, dst, w, st)
+        self.dmat, self.umat, self.vmat = dmat, umat, vmat
+        self._finish(st)
+
+    # ------------------------------------------------------------------
+    # host mirror of core.distance_graph.local_pair_tables
+    # ------------------------------------------------------------------
+
+    def _pair_rows(
+        self, src, dst, w, st
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Three-pass lexicographic (d', u, v) reduction, numpy edition.
+
+        Identical rounding to the jnp kernel: f32 ``(dist[u] + w) +
+        dist[v]`` candidates, exact-min passes, canonical bridge
+        orientation (u in the lower seed's cell).
+        """
+        S = self.S
+        dist = np.asarray(st.dist)
+        lab = np.asarray(st.lab)
+        ls, ld = lab[src], lab[dst]
+        cross = (ls != ld) & (ls < S) & (ld < S) & np.isfinite(w)
+        src, dst, w, ls, ld = (
+            src[cross], dst[cross], w[cross], ls[cross], ld[cross]
+        )
+        d = (dist[src] + w) + dist[dst]
+        key = np.minimum(ls, ld).astype(np.int64) * S + np.maximum(ls, ld)
+        lower_first = ls < ld
+        cu = np.where(lower_first, src, dst)
+        cv = np.where(lower_first, dst, src)
+
+        dmat = np.full(S * S, np.inf, np.float32)
+        np.minimum.at(dmat, key, d)
+        e1 = d == dmat[key]
+        umat = np.full(S * S, IMAX, np.int64)
+        np.minimum.at(umat, key[e1], cu[e1])
+        e2 = e1 & (cu == umat[key])
+        vmat = np.full(S * S, IMAX, np.int64)
+        np.minimum.at(vmat, key[e2], cv[e2])
+        return dmat, umat.astype(np.int32), vmat.astype(np.int32)
+
+    # ------------------------------------------------------------------
+    # MST + bridge pruning + predecessor walk — the real jitted tail
+    # ------------------------------------------------------------------
+
+    def _finish(self, st) -> None:
+        if self.mst_algo not in ("prim", "boruvka"):
+            raise ValueError(f"unknown mst_algo: {self.mst_algo!r}")
+        parent, total, num_edges = _finish_tables(
+            st,
+            jnp.asarray(self.dmat),
+            jnp.asarray(self.umat),
+            jnp.asarray(self.vmat),
+            self.S,
+            self.mst_algo,
+        )
+        self.parent = np.asarray(parent)
+        self.total_distance = float(total)
+        self.num_edges = int(num_edges)
+
+    # ------------------------------------------------------------------
+    # the epoch step
+    # ------------------------------------------------------------------
+
+    def apply_deltas(self, records: Iterable[tuple]) -> EpochResult:
+        """Appends ``records`` to the store's delta log, reloads, and
+        incrementally re-solves.  Convenience wrapper over
+        ``append_deltas`` + :meth:`resolve`."""
+        records = list(records)
+        append_deltas(self.store, records)
+        self.store.reload()
+        changed = np.unique(
+            np.asarray(
+                [r[1] for r in records] + [r[2] for r in records], np.int64
+            )
+        )
+        return self.resolve(self.store.map_ids(changed))
+
+    def resolve(self, changed: np.ndarray) -> EpochResult:
+        """Advances the session to the store's current epoch given the
+        (stored-id) vertices its new delta records touch."""
+        changed = np.unique(np.asarray(changed, np.int64))
+        old_lab = np.asarray(self.state.lab).copy()
+        old_dist = np.asarray(self.state.dist).copy()
+        old_pred = np.asarray(self.state.pred).copy()
+
+        ell = self.patcher.apply(self.store, changed)
+        warm0, cells, n_reset = reset_affected(
+            self.state, self.seeds, changed, self.S
+        )
+        st, stats = vmod.voronoi_cells_frontier(
+            ell, self._seeds_j, frontier_size=self.frontier_size, init=warm0
+        )
+        new_dist = np.asarray(st.dist)
+        new_lab = np.asarray(st.lab)
+        new_pred = np.asarray(st.pred)
+        self.state = st
+
+        S = self.S
+        diffv = np.nonzero(
+            (old_dist != new_dist)
+            | (old_lab != new_lab)
+            | (old_pred != new_pred)
+        )[0]
+        touched = np.union1d(diffv, changed)
+        members = np.empty(0, np.int64)
+        C = np.empty(0, np.int64)
+        if touched.size:
+            # pair table of every candidate that could have appeared or
+            # changed value: edges incident to a touched vertex
+            srcT, dstT, wT = effective_adjacency(self.store, touched)
+            dT, uT, vT = self._pair_rows(srcT, dstT, wT, st)
+
+            # dirty pairs: the cached winner's bridge touches T, so the
+            # runner-up among unchanged candidates (never cached) may now
+            # win — recompute those pairs' row cells exactly
+            inT = np.zeros(new_lab.shape[0], bool)
+            inT[touched] = True
+            fk = np.nonzero(np.isfinite(self.dmat))[0]
+            dirty = fk[inT[self.umat[fk]] | inT[self.vmat[fk]]]
+            # every s↔t cross edge has an endpoint in EACH cell, so one
+            # covered side per dirty pair suffices for an exact 3-pass —
+            # take the smaller cell (a perturbed region's pairs with
+            # giant partner cells then cost the region, not the giants)
+            ds, dt = dirty // S, dirty % S
+            csize = np.bincount(new_lab[new_lab < S], minlength=S)
+            C = np.unique(np.where(csize[ds] <= csize[dt], ds, dt))
+            if C.size:
+                members = np.nonzero(np.isin(new_lab, C))[0].astype(np.int64)
+                srcC, dstC, wC = effective_adjacency(self.store, members)
+                dk, uk, vk = self._pair_rows(srcC, dstC, wC, st)
+                inC = np.zeros(S, bool)
+                inC[C] = True
+                grid = (inC[:, None] | inC[None, :]).reshape(-1)
+                self.dmat[grid] = dk[grid]
+                self.umat[grid] = uk[grid]
+                self.vmat[grid] = vk[grid]
+
+            # two-way lexicographic merge of the T-incident candidates
+            # into every entry (idempotent on the recomputed grid)
+            better = (dT < self.dmat) | (
+                (dT == self.dmat)
+                & ((uT < self.umat) | ((uT == self.umat) & (vT < self.vmat)))
+            )
+            self.dmat[better] = dT[better]
+            self.umat[better] = uT[better]
+            self.vmat[better] = vT[better]
+        self._finish(st)
+
+        self.last = EpochResult(
+            epoch=int(self.store.epoch),
+            total_distance=self.total_distance,
+            num_edges=self.num_edges,
+            changed_vertices=int(changed.size),
+            affected_cells=int(cells.size),
+            vertices_reset=int(n_reset),
+            cells_recomputed=int(C.size),
+            member_vertices=int(members.size),
+            iterations=int(stats.iterations),
+            relaxations=int(stats.relaxations),
+            messages=int(stats.messages),
+        )
+        return self.last

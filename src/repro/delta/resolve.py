@@ -1,0 +1,119 @@
+"""Warm re-solve after deltas: affected-cell reset of a converged state.
+
+Given a previous epoch's converged :class:`~repro.core.voronoi.VoronoiState`
+and the set of vertices touched by edge deltas, the *affected cells* are
+the Voronoi cells owning at least one changed vertex.  Resetting exactly
+those cells' vertices to their initialization rows — and keeping every
+other entry — yields a warm-start state that is sound for
+``voronoi_cells(..., init=...)``:
+
+* every pred-chain of an unaffected cell lies entirely inside that cell
+  (each hop's owner label equals the vertex's), so no kept shortest path
+  routes through a reset region or a changed edge;
+* deleted/reweighted/added edges have both endpoints in ``changed``, so
+  every kept entry's witness path avoids all changed edges and remains
+  valid — kept entries are achievable (dist, lab, pred) labelings, never
+  stale-low;
+* relaxation only ever lowers entries lexicographically, so from this
+  warm state it converges to the unique fixpoint a cold solve reaches —
+  bit-exact (asserted in tests/test_delta.py) — re-deriving the reset
+  region and lowering any kept entry an addition improved.
+
+Changed vertices that no seed reached (label == S sentinel) get their own
+treatment: they own no cell, and an edge between two unreached vertices
+can never alter a seed's tree, so the "cell" S is reset only when a
+changed vertex is unreached but some record could connect it to the
+reached region — conservatively, we always reset the sentinel label when
+any changed vertex carries it (the unreached region is cheap to re-derive:
+it is exactly the vertices with init-row entries already).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.voronoi import VoronoiState
+
+
+def affected_cells(
+    st: VoronoiState, changed: np.ndarray, num_seeds: int
+) -> np.ndarray:
+    """Sorted unique cell labels (seed indices, possibly the S sentinel)
+    owning at least one changed vertex."""
+    lab = np.asarray(st.lab)
+    return np.unique(lab[np.asarray(changed, np.int64)])
+
+
+def reset_affected(
+    st: VoronoiState,
+    seeds,
+    changed: np.ndarray,
+    num_seeds: int,
+) -> Tuple[VoronoiState, np.ndarray, int]:
+    """Resets every vertex of a delta-affected cell to its init row.
+
+    Args:
+      st: the previous epoch's converged state.
+      seeds: (S,) seed vertex ids (stored-id space, like ``st``).
+      changed: vertex ids touched by the deltas (stored-id space).
+      num_seeds: S (the unreached sentinel label).
+
+    Returns:
+      ``(warm_state, cells, n_reset)`` — the warm-start state for
+      ``voronoi_cells(init=...)``, the affected cell labels, and how many
+      vertices were reset (0 means the cached state is already the new
+      fixpoint and no re-solve is needed).
+    """
+    lab = np.asarray(st.lab)
+    cells = affected_cells(st, changed, num_seeds)
+    if cells.size == 0:
+        return st, cells, 0
+    reset = np.isin(lab, cells)
+    n_reset = int(reset.sum())
+    n = lab.shape[0]
+    seeds = np.asarray(seeds, np.int64)
+    S = int(num_seeds)
+
+    # init rows (mirrors core.voronoi.init_state, including the duplicate-
+    # seed min-scatter): dist 0 / own label at seeds, +inf / sentinel /
+    # self-pred elsewhere
+    init_dist = np.full(n, np.inf, np.float32)
+    init_dist[seeds] = 0.0
+    init_lab = np.full(n, S, np.int32)
+    np.minimum.at(init_lab, seeds, np.arange(seeds.shape[0], dtype=np.int32))
+    init_pred = np.arange(n, dtype=np.int32)
+
+    dist = np.asarray(st.dist).copy()
+    labv = lab.copy()
+    pred = np.asarray(st.pred).copy()
+    dist[reset] = init_dist[reset]
+    labv[reset] = init_lab[reset]
+    pred[reset] = init_pred[reset]
+    # seeds whose cell was reset must come back at dist 0 even if the
+    # reset mask caught them (their init row IS the seed row, so the
+    # assignment above already restored them — this is just the invariant)
+    warm = VoronoiState(
+        dist=jnp.asarray(dist), lab=jnp.asarray(labv), pred=jnp.asarray(pred)
+    )
+    return warm, cells, n_reset
+
+
+def entry_survives(
+    lab: np.ndarray, changed: np.ndarray, num_seeds: int
+) -> bool:
+    """True when a cached solve is still exact after these deltas: no
+    changed vertex is owned by (or reachable from) any seed's cell.
+
+    ``lab`` is the converged owner-label array of the cached solve.  A
+    changed vertex with the S sentinel was unreached — an edge touching
+    only unreached vertices cannot alter any seed-rooted path, so such
+    entries survive.  Any changed vertex inside a real cell invalidates.
+    """
+    lab = np.asarray(lab)
+    ch = np.asarray(changed, np.int64)
+    if ch.size == 0:
+        return True
+    return bool((lab[ch] == int(num_seeds)).all())

@@ -15,14 +15,20 @@ wired into :class:`repro.solver.SteinerSolver`.
 * :mod:`repro.graphstore.loader`    — ``open_store`` → :class:`GraphStore`
   (lazy ``to_graph``, chunked ELL, per-shard partition loads)
 
-CLI: ``python -m repro.graphstore {build,info,partition}``.
+Mutation rides on top as the delta-log subsystem (:mod:`repro.delta`):
+``append_deltas``/``compact`` are re-exported here since they operate on
+stores.
+
+CLI: ``python -m repro.graphstore {build,info,partition,append,compact,verify}``.
 """
 
 from repro.graphstore.format import (
     FORMAT_VERSION,
+    FORMAT_VERSION_DELTA,
     ChecksumError,
     StoreFormatError,
     StoreWriter,
+    verify_store,
 )
 from repro.graphstore.ingest import (
     ArraySource,
@@ -43,11 +49,34 @@ from repro.graphstore.partition import (
     partition_store_2d,
 )
 
+# Delta-layer re-exports are lazy (PEP 562): repro.delta imports this
+# package's submodules at module level, so an eager import here would be
+# circular.
+_DELTA_EXPORTS = {
+    "append_deltas": "repro.delta.log",
+    "compact": "repro.delta.compact",
+    "CompactStats": "repro.delta.compact",
+}
+
+
+def __getattr__(name: str):
+    mod = _DELTA_EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
 __all__ = [
     "FORMAT_VERSION",
+    "FORMAT_VERSION_DELTA",
     "ChecksumError",
+    "CompactStats",
     "StoreFormatError",
     "StoreWriter",
+    "append_deltas",
+    "compact",
+    "verify_store",
     "ArraySource",
     "IngestStats",
     "RmatEdgeSource",

@@ -194,6 +194,92 @@ def _cmd_partition(args) -> int:
     return 0
 
 
+def _cmd_append(args) -> int:
+    from repro.graphstore import append_deltas
+
+    records = []
+    if args.records:
+        with open(args.records) as h:
+            for rec in json.load(h):
+                records.append(tuple(rec))
+    for u, v, w in args.add or ():
+        records.append(("add", int(u), int(v), float(w)))
+    for u, v in args.delete or ():
+        records.append(("delete", int(u), int(v)))
+    for u, v, w in args.reweight or ():
+        records.append(("reweight", int(u), int(v), float(w)))
+    if not records:
+        log.error(
+            "no delta records: pass --records FILE and/or "
+            "--add/--delete/--reweight"
+        )
+        return 2
+    info = append_deltas(args.store, records, map_ids=not args.raw_ids)
+    log.info(
+        "appended %s: %d records -> epoch %d",
+        info["file"], info["count"], info["epoch"],
+    )
+    _emit(args, {"cmd": "append", "path": args.store, **info})
+    return 0
+
+
+def _cmd_compact(args) -> int:
+    from repro.graphstore import compact
+
+    stats = compact(args.store, verify=args.verify)
+    log.info(
+        "compacted %s: epoch %d, %d segments (%d records) folded, "
+        "m %d -> %d, shards %d/%d rewritten, %.2fs",
+        args.store, stats.epoch, stats.segments_folded,
+        stats.records_folded, stats.m_before, stats.m_after,
+        stats.shard_files_rewritten, stats.shard_files_total,
+        stats.seconds,
+    )
+    _emit(args, {
+        "cmd": "compact",
+        "path": args.store,
+        "epoch": stats.epoch,
+        "segments_folded": stats.segments_folded,
+        "records_folded": stats.records_folded,
+        "m_before": stats.m_before,
+        "m_after": stats.m_after,
+        "scheme": stats.scheme,
+        "shard_files_total": stats.shard_files_total,
+        "shard_files_rewritten": stats.shard_files_rewritten,
+        "seconds": round(stats.seconds, 3),
+    })
+    return 0
+
+
+def _cmd_verify(args) -> int:
+    """Re-streams every array and delta-segment CRC; exit 1 on mismatch."""
+    from repro.graphstore import verify_store
+    from repro.graphstore.format import read_manifest
+
+    mf = read_manifest(args.store)
+    try:
+        verify_store(args.store, mf)
+    except Exception as e:
+        log.error("verify FAILED: %s", e)
+        _emit(args, {
+            "cmd": "verify", "path": args.store, "ok": False,
+            "error": str(e),
+        })
+        return 1
+    n_arrays = len(mf["arrays"])
+    n_deltas = len(mf.get("deltas", ()))
+    log.info(
+        "verified %s: %d arrays + %d delta segments OK (epoch %d)",
+        args.store, n_arrays, n_deltas, int(mf.get("epoch", 0)),
+    )
+    _emit(args, {
+        "cmd": "verify", "path": args.store, "ok": True,
+        "arrays": n_arrays, "delta_segments": n_deltas,
+        "epoch": int(mf.get("epoch", 0)),
+    })
+    return 0
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.graphstore",
@@ -252,6 +338,52 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
              "(the mesh frontier mode's on-disk priority-queue layout)",
     )
     p.set_defaults(fn=_cmd_partition)
+
+    a = sub.add_parser(
+        "append", help="append edge deltas as one crash-safe log segment"
+    )
+    a.add_argument("store")
+    a.add_argument(
+        "--records", metavar="FILE",
+        help='JSON list of records: [["add",u,v,w], ["delete",u,v], '
+             '["reweight",u,v,w], ...]',
+    )
+    a.add_argument(
+        "--add", nargs=3, action="append", metavar=("U", "V", "W"),
+        help="add one undirected edge (repeatable)",
+    )
+    a.add_argument(
+        "--delete", nargs=2, action="append", metavar=("U", "V"),
+        help="delete every live u-v edge (repeatable)",
+    )
+    a.add_argument(
+        "--reweight", nargs=3, action="append", metavar=("U", "V", "W"),
+        help="set the weight of every live u-v edge (repeatable)",
+    )
+    a.add_argument(
+        "--raw-ids", action="store_true",
+        help="endpoints are already in stored-id space (skip vertex_perm)",
+    )
+    a.set_defaults(fn=_cmd_append)
+
+    c = sub.add_parser(
+        "compact",
+        help="fold the delta log into a fresh base store (atomic; "
+             "persisted shards are maintained incrementally)",
+    )
+    c.add_argument("store")
+    c.add_argument(
+        "--verify", action="store_true",
+        help="re-stream checksums of the compacted store before returning",
+    )
+    c.set_defaults(fn=_cmd_compact)
+
+    v = sub.add_parser(
+        "verify",
+        help="re-stream every array + delta segment CRC; exit 1 on mismatch",
+    )
+    v.add_argument("store")
+    v.set_defaults(fn=_cmd_verify)
 
     args = ap.parse_args(argv)
     # (re)bind the package logger per invocation: progress goes to the

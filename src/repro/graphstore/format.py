@@ -34,6 +34,13 @@ from typing import Dict, Optional, Tuple, Union
 import numpy as np
 
 FORMAT_VERSION = 1
+# Revision 2 = revision 1 plus a delta log (``manifest["deltas"]`` append
+# segments and a monotonic ``epoch``; see repro.delta).  Written only when
+# the log is non-empty, so pre-delta readers refuse mutated stores instead
+# of silently solving the stale base CSR; compaction folds the log away
+# and drops back to revision 1.
+FORMAT_VERSION_DELTA = 2
+SUPPORTED_VERSIONS = (FORMAT_VERSION, FORMAT_VERSION_DELTA)
 MANIFEST_NAME = "manifest.json"
 STORE_SUFFIX = ".gstore"
 
@@ -117,6 +124,23 @@ class StoreWriter:
         del mm
         self._open.pop(name, None)  # absent for zero-size arrays
 
+    def register_file(self, name: str, rel: str, dtype, shape) -> None:
+        """Registers an already-written file (e.g. a shard hardlinked from
+        a previous epoch during compaction) as a manifest array.  The file
+        must exist under the store directory; it is checksummed with the
+        rest at :meth:`close`."""
+        if name in self._arrays:
+            raise StoreFormatError(f"array {name!r} already created")
+        if not (self.path / rel).is_file():
+            raise StoreFormatError(
+                f"register_file({name!r}): {rel} missing under {self.path}"
+            )
+        self._arrays[name] = {
+            "file": rel,
+            "dtype": _dtype_tag(dtype),
+            "shape": [int(s) for s in shape],
+        }
+
     def set_meta(self, **kw) -> None:
         """Top-level manifest fields (n, m, weight_range, partition, ...)."""
         self._meta.update(kw)
@@ -159,14 +183,20 @@ def read_manifest(path: Union[str, Path]) -> dict:
     if manifest.get("format") != "gstore":
         raise StoreFormatError(f"{mf}: not a gstore manifest")
     ver = manifest.get("format_version")
-    if ver != FORMAT_VERSION:
+    if ver not in SUPPORTED_VERSIONS:
         raise StoreFormatError(
             f"{mf}: format_version {ver!r} is not supported by this reader "
-            f"(supported: {FORMAT_VERSION})"
+            f"(supported: {', '.join(map(str, SUPPORTED_VERSIONS))})"
         )
     for req in ("arrays", "n", "m"):
         if req not in manifest:
             raise StoreFormatError(f"{mf}: missing required field {req!r}")
+    for entry in manifest.get("deltas", ()):
+        for req in ("file", "epoch", "count", "crc32"):
+            if req not in entry:
+                raise StoreFormatError(
+                    f"{mf}: delta segment entry missing {req!r}: {entry!r}"
+                )
     return manifest
 
 
@@ -215,8 +245,23 @@ def verify_array(path: Union[str, Path], manifest: dict, name: str) -> None:
 
 
 def verify_store(path: Union[str, Path], manifest: Optional[dict] = None) -> None:
-    """Verifies every array checksum in the store."""
+    """Verifies every array AND delta segment checksum in the store."""
+    path = Path(path)
     if manifest is None:
         manifest = read_manifest(path)
     for name in manifest["arrays"]:
         verify_array(path, manifest, name)
+    for entry in manifest.get("deltas", ()):
+        f = path / entry["file"]
+        if not f.is_file():
+            raise StoreFormatError(
+                f"{path}: delta segment {entry['file']} missing "
+                f"(manifest lists it)"
+            )
+        got = crc32_file(f)
+        want = int(entry["crc32"])
+        if got != want:
+            raise ChecksumError(
+                f"{f}: crc32 {got:#010x} != manifest {want:#010x} "
+                f"(corrupted or truncated delta segment)"
+            )

@@ -200,15 +200,35 @@ def partition_store(
         "nb": int(nb),
         "block_multiple": int(block_multiple),
         "counts": counts.tolist(),
+        # delta-log epoch these shards were cut at: shard loads refuse a
+        # store whose epoch has moved on (GraphStore.partition_fresh)
+        "epoch": int(getattr(store, "epoch", 0)),
     }
     _register_shards(store, "1d", counts, meta)
     return meta
+
+
+def _check_shards_current(store: GraphStore) -> None:
+    """Refuses shards cut before the store's current delta epoch — they
+    describe the pre-delta edge set; re-partition or compact first."""
+    # a store with no partition at all gets the loaders' clearer error
+    if not getattr(store, "partition_meta", None):
+        return
+    if not getattr(store, "partition_fresh", True):
+        raise StoreFormatError(
+            f"{store.path}: persisted shards predate the delta log "
+            f"(shard epoch "
+            f"{int((store.partition_meta or {}).get('epoch', 0))} != "
+            f"store epoch {store.epoch}); re-partition or compact "
+            f"before loading shards"
+        )
 
 
 def load_partition(store: GraphStore):
     """Per-shard loads → the exact padded 1D ``Partition`` layout."""
     from repro.core.dist_steiner import Partition
 
+    _check_shards_current(store)
     meta = store.partition_meta
     if not meta or meta.get("scheme") != "1d":
         raise StoreFormatError(
@@ -294,7 +314,13 @@ def partition_ell_store(
         )
     R, B, nb = meta["n_replica"], meta["n_blocks"], meta["nb"]
     n = store.n
-    indptr = np.asarray(store.indptr)
+    if store.overlay is None:
+        indptr = np.asarray(store.indptr)
+        indices, weights = store.indices, store.weights
+    else:
+        # ELL shards must describe the EFFECTIVE graph, like the edge
+        # shards cut from iter_coo above
+        indptr, indices, weights = store.effective_csr()
     deg = np.diff(indptr).astype(np.int64)
     rows_per_v = np.maximum(1, -(-deg // k))
     row_off = np.concatenate([[0], np.cumsum(rows_per_v)])
@@ -321,8 +347,8 @@ def partition_ell_store(
                 edge_v = np.repeat(np.arange(v0, v1, dtype=np.int64), c)
                 within = np.arange(e0, e1) - np.repeat(indptr[v0:v1], c)
                 flat = (row_off[edge_v] - r0) * k + within
-                nbr.reshape(-1)[flat] = store.indices[e0:e1]
-                wgt.reshape(-1)[flat] = store.weights[e0:e1]
+                nbr.reshape(-1)[flat] = indices[e0:e1]
+                wgt.reshape(-1)[flat] = weights[e0:e1]
             blk = row2v.astype(np.int64) // nb
             rep = (np.arange(r0, r1) - block_first_row[blk]) % R
             for r in range(R):
@@ -352,6 +378,7 @@ def load_partition_ell(store: GraphStore):
     ``ell_bucket_arrays`` — bit-for-bit agreement is a contract)."""
     from repro.core.dist_steiner import EllPartition, ell_bucket_arrays
 
+    _check_shards_current(store)
     meta = store.partition_meta
     if not meta or meta.get("scheme") != "1d" or "ell" not in meta:
         raise StoreFormatError(
@@ -416,6 +443,7 @@ def partition_store_2d(
         "nf": int(nf),
         "block_multiple": int(block_multiple),
         "counts": counts.tolist(),
+        "epoch": int(getattr(store, "epoch", 0)),
     }
     _register_shards(store, "2d", counts.reshape(-1, 1), meta)
     return meta
@@ -426,6 +454,7 @@ def load_partition_2d(store: GraphStore):
     global ids localized to (row, column) coordinates."""
     from repro.core.dist_steiner_2d import Partition2D
 
+    _check_shards_current(store)
     meta = store.partition_meta
     if not meta or meta.get("scheme") != "2d":
         raise StoreFormatError(

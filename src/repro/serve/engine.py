@@ -18,6 +18,17 @@ Lifecycle::
 or one-shot: ``server.query([3, 17, 42])``. Counters (QPS, p50/p99
 latency, cache hit rate, padding waste) via ``server.stats()``.
 
+Store-backed servers (``graph_path=`` or a ``GraphStore`` as ``g``) are
+*epoch-aware*: :meth:`SteinerServer.apply_deltas` appends edge deltas to
+the store's log (:mod:`repro.delta`), refreshes the solver handle, and
+re-validates the result cache against the changed vertices instead of
+flushing it — an entry whose converged Voronoi labels show every changed
+vertex unreached is provably still exact and keeps serving; the rest are
+evicted (counted in ``cache_invalidations_total``) and, on their next
+query, re-solved *warm* from the retained per-key Voronoi state
+(:func:`repro.delta.resolve.reset_affected`) so only the affected cells
+are re-relaxed.
+
 Future scaling PRs plug in here: sharded execution swaps the handle's
 backend ("batch" → "mesh1d") behind the same queue; landmark caching and
 async prefetch hook the admission path.
@@ -30,11 +41,13 @@ import dataclasses
 import time
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
 from repro.core.graph import Graph
 from repro.core.tree import tree_edge_sets
+from repro.core.voronoi import VoronoiState
 from repro.obs import MetricsRegistry
 from repro.serve import plan as planmod
 from repro.solver import SolverConfig, SteinerSolver
@@ -52,6 +65,10 @@ class ServeConfig:
     delta: Optional[float] = None
     max_iters: Optional[int] = None
     materialize_edges: bool = False  # host-side edge sets in results
+    # retained per-key Voronoi states for warm affected-cell re-solves
+    # after apply_deltas (store-backed servers; 0 disables retention and
+    # every invalidated entry re-solves cold through the batch path)
+    state_capacity: int = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +114,17 @@ class LRUCache:
         self._d.move_to_end(key)
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
+
+    def keys(self) -> List[Tuple[int, ...]]:
+        """Snapshot of resident keys (for the epoch-bump validity scan)."""
+        return list(self._d.keys())
+
+    def pop(self, key) -> None:
+        """Evicts one entry (no-op when absent)."""
+        self._d.pop(key, None)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
 
     def __len__(self) -> int:
         return len(self._d)
@@ -158,6 +186,22 @@ class SteinerServer:
         self.g = (
             self._handle.artifact("graph") if hasattr(g, "to_graph") else g
         )
+        # epoch awareness: store-backed servers track the delta-log epoch
+        # and keep per-key converged Voronoi states for warm re-solves
+        self._store = g if hasattr(g, "to_graph") else None
+        self.epoch = self._handle.epoch  # None for in-memory graphs
+        perm = getattr(self._store, "vertex_perm", None)
+        self._vertex_perm = None if perm is None else np.asarray(perm)
+        # key -> (epoch, bucket, dist, lab, pred) numpy snapshots of the
+        # converged state, LRU-bounded by config.state_capacity
+        self._states: "collections.OrderedDict[Tuple[int, ...], tuple]" = (
+            collections.OrderedDict()
+        )
+        # (from_epoch, to_epoch, changed | None) per bump_epoch call —
+        # warm re-solves union the changed sets since a state's epoch; a
+        # None entry (unknown changed set) blocks warm starts across it
+        self._changed_log: List[Tuple[int, int, Optional[np.ndarray]]] = []
+        self._warm_handle = None  # lazy single-backend handle on self.g
         self.cache = LRUCache(config.cache_capacity)
         self._queues: Dict[int, "collections.deque[_Pending]"] = {
             b: collections.deque() for b in sorted(config.buckets)
@@ -203,6 +247,22 @@ class SteinerServer:
             )
             for b in config.buckets
         }
+        self._m_invalidated = self.metrics.counter(
+            "cache_invalidations_total",
+            "cache entries evicted by an epoch bump (deltas touched a cell)",
+        )
+        self._m_revalidated = self.metrics.counter(
+            "serve_cache_revalidations_total",
+            "cache entries proven still exact across an epoch bump",
+        )
+        self._m_warm = self.metrics.counter(
+            "serve_warm_resolves_total",
+            "queries re-solved warm from a retained prior-epoch state",
+        )
+        self._g_epoch = self.metrics.gauge(
+            "delta_epoch", "delta-log epoch this server is serving"
+        )
+        self._g_epoch.set(float(self.epoch or 0))
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -235,6 +295,219 @@ class SteinerServer:
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------------
+    # mutation (store-backed servers)
+    # ------------------------------------------------------------------
+
+    def apply_deltas(self, records: Sequence, *, map_ids: bool = True) -> dict:
+        """Appends edge deltas to the backing store and bumps the epoch.
+
+        One call = one log segment (``repro.delta.append_deltas``) + one
+        :meth:`bump_epoch` with the exact changed-vertex set of that
+        segment: the solver handle refreshes, surviving cache entries
+        keep serving, the rest are evicted and later re-solved warm.
+
+        Returns the :meth:`bump_epoch` report plus ``"records"``.
+        """
+        if self._store is None:
+            raise ValueError(
+                "apply_deltas needs a store-backed server "
+                "(graph_path= or a GraphStore as g)"
+            )
+        from repro.delta import append_deltas, read_segment
+
+        info = append_deltas(self._store, records, map_ids=map_ids)
+        seg = read_segment(
+            self._store.path / info["file"], info["epoch"]
+        )
+        # endpoints are already in stored-id space (append mapped them),
+        # matching the id space of retained Voronoi labels
+        changed = np.unique(
+            np.concatenate([seg.u, seg.v]).astype(np.int64)
+        )
+        report = self.bump_epoch(changed)
+        report["records"] = info["count"]
+        return report
+
+    def bump_epoch(self, changed: Optional[Sequence[int]] = None) -> dict:
+        """Adopts the store's current epoch; re-validates the cache.
+
+        ``changed`` is the union of delta-record endpoints (stored-id
+        space) appended since this server's epoch.  Every cached entry
+        whose retained converged labels show ALL changed vertices
+        unreached (the S sentinel) is provably still exact — an edge
+        touching only unreached vertices cannot alter any seed-rooted
+        path — and keeps serving with its state stamp advanced.  Every
+        other entry (including entries whose state was LRU-dropped) is
+        evicted and counted in ``cache_invalidations_total``.
+
+        ``changed=None`` means "unknown": the whole cache is flushed and
+        warm starts across this bump are disabled.
+
+        Call this directly only after mutating the store externally
+        (another process ran ``append_deltas``/``compact``);
+        :meth:`apply_deltas` does the whole dance in-process.
+        """
+        if self._store is None:
+            raise ValueError(
+                "bump_epoch needs a store-backed server "
+                "(graph_path= or a GraphStore as g)"
+            )
+        from repro.delta import entry_survives
+
+        prev = self.epoch
+        refreshed = self._handle.refresh()
+        self.epoch = refreshed["epoch"]
+        # the resident COO graph and the warm handle bound to it are
+        # epoch-dependent — rebind both to the refreshed artifacts
+        self.g = self._handle.artifact("graph")
+        self._warm_handle = None
+        if changed is not None:
+            changed = np.unique(np.asarray(changed, np.int64))
+        self._changed_log.append((prev, self.epoch, changed))
+        invalidated = revalidated = 0
+        with obs.span(
+            "serve:bump_epoch",
+            from_epoch=prev,
+            epoch=self.epoch,
+            changed=0 if changed is None else int(changed.size),
+        ):
+            for key, rec in list(self._states.items()):
+                epoch0, bucket, dist, lab, pred = rec
+                if (
+                    changed is not None
+                    and epoch0 == prev
+                    and entry_survives(lab, changed, bucket)
+                ):
+                    # still the exact fixpoint at the new epoch
+                    self._states[key] = (self.epoch, bucket, dist, lab, pred)
+                    if key in self.cache:
+                        revalidated += 1
+            for key in self.cache.keys():
+                rec = self._states.get(key)
+                if rec is None or rec[0] != self.epoch:
+                    self.cache.pop(key)
+                    invalidated += 1
+        self._m_invalidated.inc(invalidated)
+        self._m_revalidated.inc(revalidated)
+        self._g_epoch.set(float(self.epoch or 0))
+        return {
+            "epoch": self.epoch,
+            "from_epoch": prev,
+            "invalidated": invalidated,
+            "revalidated": revalidated,
+            "refreshed": refreshed["refreshed"],
+        }
+
+    def _changed_since(self, epoch0: int) -> Optional[np.ndarray]:
+        """Union of changed vertices over epochs (epoch0, self.epoch];
+        None when the log does not cover that range (warm start unsound)."""
+        if epoch0 == self.epoch:
+            return np.empty(0, np.int64)
+        parts = []
+        lo = None
+        for fr, to, ch in self._changed_log:
+            if to <= epoch0:
+                continue
+            if ch is None:
+                return None
+            parts.append(ch)
+            lo = fr if lo is None else min(lo, fr)
+        if lo is None or lo > epoch0:
+            return None  # gap: the state predates the retained log
+        return np.unique(np.concatenate(parts))
+
+    def _store_state(self, key, bucket: int, dist, lab, pred) -> None:
+        """Retains one converged Voronoi state (numpy, current epoch)."""
+        if self._store is None or self.config.state_capacity <= 0:
+            return
+        self._states[key] = (
+            self.epoch,
+            int(bucket),
+            np.asarray(dist),
+            np.asarray(lab),
+            np.asarray(pred),
+        )
+        self._states.move_to_end(key)
+        while len(self._states) > self.config.state_capacity:
+            self._states.popitem(last=False)
+
+    def _warm_prepared(self):
+        """Lazy single-backend handle over the resident graph for warm
+        affected-cell re-solves (rebuilt after every epoch bump)."""
+        if self._warm_handle is None:
+            mode = (
+                self.config.mode
+                if self.config.mode in ("dense", "bucket")
+                else "dense"
+            )
+            self._warm_handle = SteinerSolver(
+                SolverConfig(
+                    backend="single",
+                    mode=mode,
+                    mst_algo=self.config.mst_algo,
+                    delta=self.config.delta,
+                    max_iters=self.config.max_iters,
+                )
+            ).prepare(self.g)
+        return self._warm_handle
+
+    def _warm_resolve(self, plan: planmod.QueryPlan) -> Optional[QueryResult]:
+        """Re-solves one invalidated query warm from its retained state.
+
+        Resets only the delta-affected Voronoi cells
+        (:func:`repro.delta.resolve.reset_affected`) and relaxes from
+        there — bit-exact vs a cold solve, but the kept cells start
+        converged.  Returns None (caller falls through to a cold batch
+        lane) when no usable state is retained.
+        """
+        if self._store is None or self.config.state_capacity <= 0:
+            return None
+        if self.config.materialize_edges:
+            return None  # edge materialization runs on the batch path
+        rec = self._states.get(plan.key)
+        if rec is None:
+            return None
+        epoch0, bucket, dist, lab, pred = rec
+        if bucket != plan.bucket:
+            return None
+        changed = self._changed_since(epoch0)
+        if changed is None:
+            return None
+        from repro.delta import reset_affected
+
+        self._states.move_to_end(plan.key)
+        seeds = plan.padded.astype(np.int64)
+        if self._vertex_perm is not None:
+            seeds = self._vertex_perm[seeds]
+        st = VoronoiState(
+            dist=jnp.asarray(dist), lab=jnp.asarray(lab), pred=jnp.asarray(pred)
+        )
+        warm, cells, n_reset = reset_affected(st, seeds, changed, bucket)
+        with obs.span(
+            "serve:warm_resolve",
+            bucket=plan.bucket,
+            cells=int(cells.size),
+            reset=n_reset,
+        ):
+            out = self._warm_prepared().solve(
+                seeds.astype(np.int32), warm_state=warm
+            )
+        result = QueryResult(
+            key=plan.key,
+            bucket=plan.bucket,
+            total_distance=float(out.total_distance),
+            num_edges=int(out.num_edges),
+            edges=None,
+            from_cache=False,
+            latency_s=0.0,
+        )
+        self.cache.put(plan.key, result)
+        s = out.raw.state
+        self._store_state(plan.key, bucket, s.dist, s.lab, s.pred)
+        self._m_warm.inc()
+        return result
 
     # ------------------------------------------------------------------
     # execution
@@ -272,7 +545,7 @@ class SteinerServer:
                 res.tree,
                 seed_batch.shape[0] if n_real is None else n_real,
             )
-        return totals, nedges, edges
+        return totals, nedges, edges, res
 
     def flush(self) -> Dict[int, QueryResult]:
         """Drains every bucket queue; returns {ticket: QueryResult}.
@@ -294,15 +567,27 @@ class SteinerServer:
                 # already-cached tickets ride along without a lane.
                 lanes: List[np.ndarray] = []
                 lane_of: Dict[Tuple[int, ...], int] = {}
-                riders: List[Tuple[_Pending, Optional[QueryResult]]] = []
+                # (pending, result-or-None, from_cache): result is None
+                # for lanes awaiting the batch execute; a non-None result
+                # with from_cache=False came from a warm re-solve during
+                # assembly
+                riders: List[
+                    Tuple[_Pending, Optional[QueryResult], bool]
+                ] = []
                 t_assemble = time.perf_counter()
                 while queue and len(lanes) < B:
                     p = queue.popleft()
                     hit = self.cache.get(p.plan.key)
+                    from_cache = hit is not None
+                    if hit is None:
+                        # invalidated by an epoch bump but state retained:
+                        # re-solve warm (affected cells only) instead of
+                        # burning a cold batch lane
+                        hit = self._warm_resolve(p.plan)
                     if hit is None and p.plan.key not in lane_of:
                         lane_of[p.plan.key] = len(lanes)
                         lanes.append(p.plan.padded)
-                    riders.append((p, hit))
+                    riders.append((p, hit, from_cache))
                 t_assembled = time.perf_counter()
                 t_done = t_assembled
                 if obs.tracing():
@@ -315,7 +600,7 @@ class SteinerServer:
                         riders=len(riders),
                     )
                     # retroactive queue-wait span per ticket in this batch
-                    for p, _ in riders:
+                    for p, _, _ in riders:
                         obs.add_span(
                             "serve:queue_wait",
                             p.t_submit,
@@ -332,7 +617,7 @@ class SteinerServer:
                         with obs.span(
                             "serve:solve", bucket=bucket, lanes=n_real
                         ):
-                            totals, nedges, edges = self._execute(
+                            totals, nedges, edges, res = self._execute(
                                 bucket, np.stack(lanes), n_real
                             )
                     except Exception:
@@ -341,7 +626,7 @@ class SteinerServer:
                         # batches this call already completed, so a
                         # solver failure drops no tickets; then surface
                         # the failure to the caller
-                        for p, _ in reversed(riders):
+                        for p, _, _ in reversed(riders):
                             queue.appendleft(p)
                         self._ready = out
                         raise
@@ -349,6 +634,17 @@ class SteinerServer:
                     self._m_batches[bucket].inc()
                     self._m_lanes.inc(B)
                     self._m_padded.inc(B - n_real)
+                    capture = (
+                        self._store is not None
+                        and self.config.state_capacity > 0
+                    )
+                    if capture:
+                        # one host pull of the real lanes' converged
+                        # states — the raw material for warm re-solves
+                        # after future epoch bumps
+                        st_dist = np.asarray(res.state.dist)[:n_real]
+                        st_lab = np.asarray(res.state.lab)[:n_real]
+                        st_pred = np.asarray(res.state.pred)[:n_real]
                     for key, i in lane_of.items():
                         fresh = QueryResult(
                             key=key,
@@ -361,19 +657,24 @@ class SteinerServer:
                         )
                         fresh_by_key[key] = fresh
                         self.cache.put(key, fresh)
+                        if capture:
+                            self._store_state(
+                                key, bucket,
+                                st_dist[i], st_lab[i], st_pred[i],
+                            )
                 t_stash = time.perf_counter()
-                for p, hit in riders:
+                for p, hit, from_cache in riders:
                     if hit is None:
                         hit = fresh_by_key[p.plan.key]
-                        from_cache = False
+                        ready_at = t_done  # waited for the batch execute
                     else:
-                        from_cache = True
+                        # cache hits AND warm re-solves were ready once
+                        # assembly finished
+                        ready_at = t_assembled
                     if from_cache:
                         self._m_hits.inc()
                     self._m_completed.inc()
-                    # hits were ready at assembly; only fresh lanes waited
-                    # for the batch execute
-                    lat = (t_assembled if from_cache else t_done) - p.t_submit
+                    lat = ready_at - p.t_submit
                     self._m_lat["cached" if from_cache else "fresh"].observe(lat)
                     out[p.ticket] = hit.with_latency(lat, from_cache)
                 if obs.tracing():
@@ -474,6 +775,13 @@ class SteinerServer:
             "batches_per_bucket": {
                 b: int(c.value) for b, c in self._m_batches.items()
             },
+            # delta-epoch serving state (trivial on in-memory servers:
+            # epoch None, counters 0)
+            "epoch": self.epoch,
+            "cache_invalidations": int(self._m_invalidated.value),
+            "cache_revalidations": int(self._m_revalidated.value),
+            "warm_resolves": int(self._m_warm.value),
+            "retained_states": len(self._states),
         }
 
     def prometheus_text(self) -> str:

@@ -55,6 +55,9 @@ class PreparedGraph:
         self.graph = graph
         self._backend = backend
         self._artifacts = artifacts
+        # delta-log epoch of the store at prepare time (None for in-memory
+        # graphs): refresh() compares it against the store's current epoch
+        self.epoch = getattr(graph, "epoch", None)
         # hub-sorted stores relabel vertices; solve() takes ORIGINAL ids
         # and translates through the persisted permutation
         perm = getattr(graph, "vertex_perm", None)
@@ -81,7 +84,50 @@ class PreparedGraph:
         ex = self._artifacts.get("executables")
         return len(ex) if ex is not None else 0
 
-    def solve(self, seeds) -> SolveOutput:
+    def refresh(self) -> dict:
+        """Re-prepares only what the store's delta log changed.
+
+        For handles prepared from a :class:`~repro.graphstore.GraphStore`
+        whose epoch moved on (``append_deltas``/``compact`` since
+        prepare), this reloads the store and rebuilds the epoch-dependent
+        artifacts — the resident COO graph, the ELL view, the partition
+        and its device placement.  Epoch-*invariant* artifacts are kept:
+        the device mesh and, crucially, the compiled mesh executables
+        (their static geometry — n, block sizes, seed counts — does not
+        depend on edge content), so a refresh never re-traces.
+
+        Returns a report ``{"refreshed": (...), "from_epoch", "epoch"}``;
+        a no-op (same epoch, or an in-memory graph) returns
+        ``refreshed=()``.
+        """
+        from repro.graphstore.loader import GraphStore
+
+        if not isinstance(self.graph, GraphStore):
+            return {"refreshed": (), "from_epoch": self.epoch,
+                    "epoch": self.epoch}
+        store = self.graph
+        store.reload(verify=False)
+        if store.epoch == self.epoch:
+            return {"refreshed": (), "from_epoch": self.epoch,
+                    "epoch": store.epoch}
+        with obs.span(
+            "refresh", backend=self.backend,
+            from_epoch=self.epoch, to_epoch=store.epoch,
+        ):
+            new = self._backend.prepare(self.config, store)
+        old = self._artifacts
+        for keep in ("executables", "mesh"):
+            if keep in old and keep in new:
+                new[keep] = old[keep]
+        refreshed = tuple(
+            sorted(k for k in new if k not in ("store", "executables", "mesh"))
+        )
+        self._artifacts = new
+        prev, self.epoch = self.epoch, store.epoch
+        return {"refreshed": refreshed, "from_epoch": prev,
+                "epoch": store.epoch}
+
+    def solve(self, seeds, *, warm_state=None) -> SolveOutput:
         """Solves one query — (S,) seed ids, or (B, S) for backend="batch".
 
         The static seed count is taken from the trailing axis; repeated
@@ -89,7 +135,17 @@ class PreparedGraph:
         ids are always in the graph's *original* numbering: handles
         prepared from a hub-sorted store translate them through the
         stored ``vertex_perm`` here.
+
+        ``warm_state``: optional :class:`~repro.core.voronoi.VoronoiState`
+        warm start (backend="single", mode "dense"|"bucket" only) — see
+        :func:`repro.delta.resolve.reset_affected` for how to build a
+        sound one from a previous epoch's converged state.
         """
+        if warm_state is not None and self.backend != "single":
+            raise ValueError(
+                f"warm_state is only supported by backend 'single', "
+                f"not {self.backend!r}"
+            )
         if self._vertex_perm is not None:
             seeds = self._vertex_perm[np.asarray(seeds, np.int64)]
         if self._backend.seeds_ndim == 2:
@@ -108,16 +164,19 @@ class PreparedGraph:
                     f"got shape {seeds.shape}"
                 )
             num_seeds = int(seeds.shape[0])
+        kw = {} if warm_state is None else {"warm_state": warm_state}
         if not obs.enabled():
             return self._backend.solve(
-                self.config, self._artifacts, seeds, num_seeds
+                self.config, self._artifacts, seeds, num_seeds, **kw
             )
         cfg = self.config
         t0 = obs.now()
         with obs.span(
             "solve", backend=self.backend, mode=cfg.mode, num_seeds=num_seeds
         ):
-            out = self._backend.solve(cfg, self._artifacts, seeds, num_seeds)
+            out = self._backend.solve(
+                cfg, self._artifacts, seeds, num_seeds, **kw
+            )
         t1 = obs.now()
         hist = obs.histogram(
             "solver_solve_seconds",

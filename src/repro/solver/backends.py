@@ -75,7 +75,8 @@ def trace_count(key: Optional[str] = None) -> int:
     ),
 )
 def _exec_single_coo(
-    g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters, telemetry_rounds
+    g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters, telemetry_rounds,
+    init=None,
 ):
     _bump("single")
     return smod.run_pipeline(
@@ -87,6 +88,7 @@ def _exec_single_coo(
         delta=delta,
         max_iters=max_iters,
         telemetry_rounds=telemetry_rounds,
+        init=init,
     )
 
 
@@ -99,7 +101,7 @@ def _exec_single_coo(
 )
 def _exec_single_frontier(
     g, ell, seeds, *, num_seeds, mst_algo, frontier_size, max_iters,
-    telemetry_rounds,
+    telemetry_rounds, init=None,
 ):
     _bump("single")
     st, stats = vmod.voronoi_cells_frontier(
@@ -108,6 +110,7 @@ def _exec_single_frontier(
         frontier_size=frontier_size,
         max_rounds=max_iters,
         telemetry_rounds=telemetry_rounds,
+        init=init,
     )
     return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
 
@@ -330,7 +333,9 @@ class _Backend:
                 art: dict = {"graph": store.to_graph(), "store": store}
             if cfg.mode in self.ell_modes:
                 with obs.span("prepare:ell_build", backend=self.name):
-                    art["ell"] = store.ell(cfg.ell_width)
+                    art["ell"] = store.ell(
+                        cfg.ell_width, pad_rows_to=cfg.ell_pad_rows
+                    )
             return art
         art = {"graph": g}
         if cfg.mode in self.ell_modes:
@@ -347,9 +352,10 @@ class SingleBackend(_Backend):
     seeds_ndim = 1
     ell_modes = ("frontier", "pallas")
 
-    def solve(self, cfg, artifacts, seeds, num_seeds) -> SolveOutput:
+    def solve(self, cfg, artifacts, seeds, num_seeds, warm_state=None) -> SolveOutput:
         res = self.solve_raw(
-            cfg, artifacts["graph"], seeds, num_seeds, ell=artifacts.get("ell")
+            cfg, artifacts["graph"], seeds, num_seeds,
+            ell=artifacts.get("ell"), init=warm_state,
         )
         return SolveOutput(
             total_distance=float(res.tree.total_distance),
@@ -371,10 +377,23 @@ class SingleBackend(_Backend):
         seeds,
         num_seeds: int,
         ell: Optional[EllGraph] = None,
+        init=None,
     ) -> smod.SteinerResult:
         """Dispatch to the shared jitted executable; returns the native
-        :class:`SteinerResult` (the legacy ``steiner_tree`` contract)."""
+        :class:`SteinerResult` (the legacy ``steiner_tree`` contract).
+
+        ``init`` warm-starts the Voronoi loop (the delta layer's
+        affected-cell re-solve).  Dense/bucket re-relax everything each
+        round from the warm values; frontier seeds its dirty-row set
+        with one violated-edge sweep, so its warm work is proportional
+        to the reset region.  Pallas has no warm path.
+        """
         seeds = jnp.asarray(seeds, jnp.int32)
+        if init is not None and cfg.mode not in ("dense", "bucket", "frontier"):
+            raise ValueError(
+                f"warm-start init is only supported for mode "
+                f"'dense'|'bucket'|'frontier', not {cfg.mode!r}"
+            )
         if cfg.mode == "frontier":
             if ell is None:
                 ell = ell_view_cached(g, cfg.ell_width)
@@ -387,6 +406,7 @@ class SingleBackend(_Backend):
                 frontier_size=cfg.frontier_size,
                 max_iters=cfg.max_iters,
                 telemetry_rounds=cfg.telemetry_rounds,
+                init=init,
             )
         if cfg.mode == "pallas":
             if ell is None:
@@ -408,6 +428,7 @@ class SingleBackend(_Backend):
             delta=cfg.delta,
             max_iters=cfg.max_iters,
             telemetry_rounds=cfg.telemetry_rounds,
+            init=init,
         )
 
 
@@ -546,6 +567,7 @@ class Mesh1DBackend(_Backend):
                 and meta.get("scheme") == "1d"
                 and (meta["n_replica"], meta["n_blocks"]) == (n_replica, n_blocks)
                 and meta.get("ell", {}).get("k") == cfg.ell_width
+                and store.partition_fresh  # shards predating deltas are stale
             ):
                 with obs.span("prepare:shard_load", backend=self.name):
                     ellpart = store.load_partition_ell()
@@ -591,6 +613,7 @@ class Mesh1DBackend(_Backend):
                 meta
                 and meta.get("scheme") == "1d"
                 and (meta["n_replica"], meta["n_blocks"]) == (n_replica, n_blocks)
+                and store.partition_fresh  # shards predating deltas are stale
             ):
                 # per-shard load of the prebuilt partition: the full edge
                 # list is never expanded on the host
@@ -747,6 +770,7 @@ class Mesh2DBackend(_Backend):
                 meta
                 and meta.get("scheme") == "2d"
                 and (meta["R"], meta["C"]) == (R, C)
+                and store.partition_fresh  # shards predating deltas are stale
             ):
                 with obs.span("prepare:shard_load", backend=self.name):
                     part = store.load_partition_2d()

@@ -53,6 +53,13 @@ class SolverConfig:
       delta: Δ-bucket width (mode="bucket"); None → mean edge weight.
       max_iters: safety cap on relaxation rounds (None → 4n + 64).
       ell_width: ELL row width when building the frontier/pallas view.
+      ell_pad_rows: round the ELL row count up to a multiple of this
+        when preparing from a :class:`~repro.graphstore.GraphStore`.
+        Padding rows are inert (+inf weights), but a stable padded shape
+        keeps the compiled frontier/pallas executables valid across
+        ``refresh()`` after small delta batches — without it any row-
+        count drift forces an XLA retrace that can dwarf the warm
+        re-solve it feeds.  1 (default) disables padding.
       frontier_size: top-K frontier rows per round (mode="frontier", and
         mode="pallas" with ``pallas_frontier=True``); per *device* on
         backend="mesh1d" (each block runs its own priority queue).
@@ -91,6 +98,7 @@ class SolverConfig:
     max_iters: Optional[int] = None
     # mode="frontier" / mode="pallas"
     ell_width: int = 32
+    ell_pad_rows: int = 1
     frontier_size: int = 1024
     # mode="pallas"
     block_rows: int = 256
@@ -131,8 +139,9 @@ class SolverConfig:
             raise ValueError(f"delta must be positive, got {self.delta}")
         if self.max_iters is not None and self.max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
-        for name in ("ell_width", "frontier_size", "batch_size", "local_steps",
-                     "pair_chunks", "block_rows"):
+        for name in ("ell_width", "ell_pad_rows", "frontier_size",
+                     "batch_size", "local_steps", "pair_chunks",
+                     "block_rows"):
             v = getattr(self, name)
             if not (isinstance(v, int) and v >= 1):
                 raise ValueError(f"{name} must be a positive int, got {v!r}")

@@ -1,0 +1,951 @@
+"""repro.delta: log-structured edge deltas over .gstore graphs.
+
+Covers the full dynamic-graph loop: crash-safe append → overlay replay →
+solver parity on all four backends → compact bit-identity vs fresh
+ingest → incremental shard maintenance → epoch-aware refresh / warm
+re-solve → serve-cache invalidation.  The scale-14 acceptance tier is
+behind the ``slow`` marker.
+"""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import from_edges
+from repro.core.graph import bump_graph_version, ell_view_cached
+from repro.data.graphs import rmat_edges
+from repro.delta import (
+    IncrementalSession,
+    append_deltas,
+    compact,
+    effective_adjacency,
+    entry_survives,
+    read_segment,
+    reset_affected,
+    segment_name,
+)
+from repro.graphstore import (
+    ArraySource,
+    RmatEdgeSource,
+    StoreFormatError,
+    build_store,
+    load_partition,
+    open_store,
+    partition_ell_store,
+    partition_store,
+    partition_store_2d,
+    verify_store,
+)
+from repro.graphstore.format import (
+    FORMAT_VERSION,
+    FORMAT_VERSION_DELTA,
+    crc32_file,
+    read_manifest,
+)
+from repro.solver import SolverConfig, SteinerSolver
+
+
+class _ChunkSource:
+    """Edge source over an explicit chunk list (re-iterable)."""
+
+    def __init__(self, n, chunks, describe="chunks"):
+        self.n = int(n)
+        self._chunks = chunks
+        self.describe = describe
+
+    def __iter__(self):
+        for s, d, w in self._chunks:
+            yield (
+                np.asarray(s, np.int64),
+                np.asarray(d, np.int64),
+                np.asarray(w, np.float32),
+            )
+
+
+# ----------------------------------------------------------------------------
+# the pure-Python fold model shared with the hypothesis property test
+# ----------------------------------------------------------------------------
+
+
+def apply_ops_model(base, ops_segments):
+    """Reference fold of delta ops over an undirected edge list.
+
+    ``base``: list of (u, v, w) in arrival order; ``ops_segments``: one
+    record list per ``append_deltas`` call, in epoch order.  Returns
+    ``(keep, adds_by_segment)`` where ``keep`` carries each surviving
+    base edge with its original position and ``adds_by_segment`` holds
+    each segment's surviving additions in arrival order — mirroring the
+    documented record semantics: delete kills every live matching edge
+    (base and earlier adds, both orientations), reweight sets the weight
+    of every live matching edge, re-adding after a delete creates a new
+    live edge.
+    """
+    base = [[u, v, w, True] for (u, v, w) in base]
+    adds = []  # [u, v, w, alive, segment]
+    for si, ops in enumerate(ops_segments):
+        for rec in ops:
+            if rec[0] == "add":
+                adds.append([rec[1], rec[2], rec[3], True, si])
+                continue
+            key = frozenset((rec[1], rec[2]))
+            for lst in (base, adds):
+                for e in lst:
+                    if e[3] and frozenset((e[0], e[1])) == key:
+                        if rec[0] == "delete":
+                            e[3] = False
+                        else:  # reweight
+                            e[2] = rec[3]
+    keep = [
+        (i, u, v, w) for i, (u, v, w, ok) in enumerate(base) if ok
+    ]
+    adds_by_seg = [
+        [(u, v, w) for u, v, w, ok, s in adds if ok and s == si]
+        for si in range(len(ops_segments))
+    ]
+    return keep, adds_by_seg
+
+
+def reference_store_for(
+    tmp, n, base, ops_segments, name="ref.gstore", chunk_edges=1 << 16
+):
+    """Fresh ingest of the model's final edge set, in canonical order.
+
+    The surviving base edges keep the base ingest's chunk boundaries
+    (per-row neighbor order is arrival order, so boundaries matter for
+    bit-identity), followed by one chunk per append segment's surviving
+    additions — exactly the effective edge stream ``compact()``
+    re-ingests (``GraphStore.iter_coo``)."""
+    keep, adds_by_seg = apply_ops_model(base, ops_segments)
+    chunks = []
+    for lo in range(0, max(len(base), 1), chunk_edges):
+        part = [
+            (u, v, w) for (i, u, v, w) in keep if lo <= i < lo + chunk_edges
+        ]
+        if part:
+            s, d, w = zip(*part)
+            chunks.append((np.asarray(s), np.asarray(d), np.asarray(w)))
+    for seg in adds_by_seg:
+        if seg:
+            s, d, w = zip(*seg)
+            chunks.append((np.asarray(s), np.asarray(d), np.asarray(w)))
+    path, _ = build_store(_ChunkSource(n, chunks), tmp / name)
+    return open_store(path, verify=False)
+
+
+def assert_csr_equal(a, b):
+    assert np.array_equal(np.asarray(a.indptr), np.asarray(b.indptr))
+    assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert np.array_equal(np.asarray(a.weights), np.asarray(b.weights))
+
+
+def check_append_compact_roundtrip(tmp, n, base, ops_segments):
+    """Shared core of the deterministic and hypothesis-driven tests:
+    overlay view == compacted store == fresh ingest, bit for bit."""
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    for ops in ops_segments:
+        if ops:
+            append_deltas(store, ops)
+    ops_segments = [ops for ops in ops_segments if ops]
+    ref = reference_store_for(tmp, n, base, ops_segments)
+    # overlay view (no rewrite yet)
+    ip, ix, wt = store.effective_csr()
+    assert np.array_equal(ip, np.asarray(ref.indptr))
+    assert np.array_equal(ix, np.asarray(ref.indices))
+    assert np.array_equal(wt, np.asarray(ref.weights))
+    # compacted base (log folded in)
+    compact(store)
+    assert store.overlay is None
+    assert_csr_equal(store, ref)
+    assert store.manifest.get("weight_range") == ref.manifest.get(
+        "weight_range"
+    )
+    verify_store(store.path)
+    return store
+
+
+def _mixed_ops(rng, n, base, k):
+    """k random add/delete/reweight records; deletes and reweights target
+    real base pairs so they actually bite."""
+    ops = []
+    pairs = [(u, v) for (u, v, _) in base]
+    for _ in range(k):
+        kind = rng.integers(0, 3)
+        if kind == 0 or not pairs:
+            u = int(rng.integers(0, n))
+            v = int(rng.integers(0, n))
+            if u == v:
+                v = (v + 1) % n
+            ops.append(("add", u, v, float(rng.integers(1, 50))))
+        else:
+            u, v = pairs[int(rng.integers(0, len(pairs)))]
+            if kind == 1:
+                ops.append(("delete", int(u), int(v)))
+            else:
+                ops.append(("reweight", int(u), int(v),
+                            float(rng.integers(1, 50))))
+    return ops
+
+
+def _rmat_base(scale, ef, seed):
+    """Undirected RMAT edge list + n (the same stream build_store ingests)."""
+    src, dst, w, n = rmat_edges(scale, ef, seed=seed)
+    return list(zip(src.tolist(), dst.tolist(), w.tolist())), n
+
+
+# ----------------------------------------------------------------------------
+# log + overlay + compact: bit-identity vs fresh ingest
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("trial", range(3))
+def test_append_compact_bit_identical_to_fresh_ingest(tmp_path, trial):
+    rng = np.random.default_rng(100 + trial)
+    base, n = _rmat_base(7, 4, seed=trial)
+    ops = _mixed_ops(rng, n, base, 40)
+    check_append_compact_roundtrip(tmp_path, n, base, [ops])
+
+
+def test_multi_segment_interleaving(tmp_path):
+    """Ops split across several append calls fold identically to one log."""
+    rng = np.random.default_rng(7)
+    base, n = _rmat_base(7, 4, seed=9)
+    ops = _mixed_ops(rng, n, base, 30)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    segments = [ops[lo : lo + 7] for lo in range(0, len(ops), 7)]
+    for seg in segments:
+        append_deltas(store, seg)
+    assert store.epoch == len(segments)
+    assert store.manifest["format_version"] == FORMAT_VERSION_DELTA
+    ref = reference_store_for(tmp_path, n, base, segments)
+    ip, ix, wt = store.effective_csr()
+    assert np.array_equal(ix, np.asarray(ref.indices))
+    assert np.array_equal(wt, np.asarray(ref.weights))
+    compact(store)
+    # epoch is retained across compaction; the layout drops back to the
+    # delta-free revision
+    assert store.epoch == len(segments)
+    assert store.manifest["format_version"] == FORMAT_VERSION
+    assert_csr_equal(store, ref)
+
+
+def test_orphan_segment_is_invisible(tmp_path):
+    """A crash between segment write and manifest rename leaves an orphan
+    file that replay and verify both ignore."""
+    base, n = _rmat_base(7, 4, seed=2)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    append_deltas(store, [("add", 1, 2, 3.0)])
+    m_before = store.effective_csr()[0][-1]
+    # simulate the torn append: a segment file the manifest never adopted
+    shutil.copy(path / segment_name(1), path / segment_name(2))
+    store.reload()
+    assert store.epoch == 1  # manifest is the source of truth
+    assert store.effective_csr()[0][-1] == m_before
+    verify_store(path)  # orphan is not listed, so not checked
+
+
+def test_append_validates_records(tmp_path):
+    base, n = _rmat_base(6, 4, seed=1)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    for bad in (
+        [("add", 0, 0, 1.0)],  # self-loop
+        [("add", 0, n, 1.0)],  # out of range
+        [("add", 0, 1, -2.0)],  # non-positive weight
+        [("delete", 0, 1, 5.0)],  # delete takes no weight
+        [("frobnicate", 0, 1)],  # unknown op
+    ):
+        with pytest.raises(ValueError):
+            append_deltas(store, bad)
+    assert store.epoch == 0  # nothing was applied
+
+
+def test_delta_segment_crc_detected(tmp_path):
+    base, n = _rmat_base(6, 4, seed=4)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    append_deltas(path, [("add", 1, 2, 3.0), ("add", 2, 3, 4.0)])
+    seg = path / segment_name(1)
+    raw = bytearray(seg.read_bytes())
+    raw[-1] ^= 0xFF
+    seg.write_bytes(bytes(raw))
+    with pytest.raises(Exception):  # ChecksumError
+        verify_store(path)
+
+
+# ----------------------------------------------------------------------------
+# incremental shard maintenance
+# ----------------------------------------------------------------------------
+
+
+def _shard_files(path):
+    shdir = path / "shards"
+    if not shdir.is_dir():
+        return []
+    return sorted("shards/" + f for f in os.listdir(shdir))
+
+
+def test_compact_refreshes_1d_shards_incrementally(tmp_path):
+    rng = np.random.default_rng(3)
+    base, n = _rmat_base(9, 6, seed=11)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    partition_store(store, n_replica=2, n_blocks=4)
+    partition_ell_store(store, k=8)
+    store = open_store(path, verify=False)
+    # deltas localized to one vertex block → most shard files untouched
+    nb = store.partition_meta["nb"]
+    ops = []
+    for _ in range(20):
+        u = int(rng.integers(0, nb))
+        v = int(rng.integers(0, nb))
+        if u == v:
+            v = (v + 1) % nb
+        ops.append(("add", u, v, float(rng.integers(1, 50))))
+    append_deltas(store, ops)
+    mtimes = {f: os.stat(path / f).st_mtime_ns for f in _shard_files(path)}
+    stats = compact(store)
+    assert stats.scheme == "1d"
+    assert 0 < stats.shard_files_rewritten < stats.shard_files_total
+    kept = [
+        f for f in _shard_files(path)
+        if os.stat(path / f).st_mtime_ns == mtimes[f]
+    ]
+    assert len(kept) == stats.shard_files_total - stats.shard_files_rewritten
+    # ground truth: every shard byte-identical to a from-scratch partition
+    # of the compacted CSR
+    ref_dir = tmp_path / "ref.gstore"
+    shutil.copytree(path, ref_dir)
+    ref = open_store(ref_dir, verify=False)
+    partition_store(ref, n_replica=2, n_blocks=4)
+    partition_ell_store(ref, k=8)
+    for f in _shard_files(path):
+        assert crc32_file(path / f) == crc32_file(ref_dir / f), f
+    # and the loader serves them
+    part = load_partition(store)
+    rpart = load_partition(ref)
+    assert np.array_equal(np.asarray(part.src), np.asarray(rpart.src))
+    assert np.array_equal(np.asarray(part.w), np.asarray(rpart.w))
+
+
+def test_compact_refreshes_2d_shards_incrementally(tmp_path):
+    rng = np.random.default_rng(5)
+    base, n = _rmat_base(9, 6, seed=13)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    partition_store_2d(store, R=2, C=2)
+    store = open_store(path, verify=False)
+    nf = store.partition_meta["nf"]
+    ops = [
+        ("add", int(rng.integers(0, nf)), int(rng.integers(nf, 2 * nf)),
+         float(rng.integers(1, 50)))
+        for _ in range(10)
+    ]
+    append_deltas(store, ops)
+    mtimes = {f: os.stat(path / f).st_mtime_ns for f in _shard_files(path)}
+    stats = compact(store)
+    assert stats.scheme == "2d"
+    assert 0 < stats.shard_files_rewritten < stats.shard_files_total
+    assert any(
+        os.stat(path / f).st_mtime_ns == mtimes[f] for f in _shard_files(path)
+    )
+    ref_dir = tmp_path / "ref.gstore"
+    shutil.copytree(path, ref_dir)
+    ref = open_store(ref_dir, verify=False)
+    partition_store_2d(ref, R=2, C=2)
+    for f in _shard_files(path):
+        assert crc32_file(path / f) == crc32_file(ref_dir / f), f
+
+
+def test_stale_shards_refused_until_compact(tmp_path):
+    base, n = _rmat_base(8, 4, seed=6)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    partition_store(store, n_replica=1, n_blocks=2)
+    store = open_store(path, verify=False)
+    append_deltas(store, [("add", 0, 1, 2.0)])
+    assert not store.partition_fresh
+    with pytest.raises(StoreFormatError):
+        load_partition(store)
+    compact(store)
+    assert store.partition_fresh
+    load_partition(store)  # refreshed shards load again
+
+
+# ----------------------------------------------------------------------------
+# solver parity across all four backends
+# ----------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def parity_delta_setup(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("delta_parity")
+    rng = np.random.default_rng(42)
+    base, n = _rmat_base(10, 6, seed=21)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    partition_store(store, n_replica=1, n_blocks=2)
+    store = open_store(path, verify=False)
+    ops = _mixed_ops(rng, n, base, 200)
+    append_deltas(store, ops[:120])
+    append_deltas(store, ops[120:])
+    ref = reference_store_for(tmp, n, base, [ops[:120], ops[120:]])
+    seeds = rng.choice(n, size=8, replace=False).astype(np.int32)
+    return tmp, path, ref, seeds
+
+
+BACKENDS = [
+    ("single", {}),
+    ("batch", {"batch_size": 2}),
+    ("mesh1d", {"mesh_shape": (1, 1)}),
+    ("mesh2d", {"mesh_shape": (1, 1)}),
+]
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+def test_backend_parity_overlay_vs_compact_vs_fresh(
+    parity_delta_setup, backend, kw
+):
+    """The three faces of the mutated graph answer identically: overlay
+    (log replayed at open), compacted base, and a from-scratch ingest of
+    the final edge set."""
+    tmp, path, ref, seeds = parity_delta_setup
+    cfg = SolverConfig(backend=backend, mode="bucket", **kw)
+    q = np.stack([seeds, seeds[::-1]]) if backend == "batch" else seeds
+
+    overlay_store = open_store(path, verify=False)
+    assert overlay_store.overlay is not None
+    a = SteinerSolver(cfg).prepare(overlay_store).solve(q)
+
+    cdir = tmp / f"compact_{backend}.gstore"
+    shutil.copytree(path, cdir)
+    cstore = open_store(cdir, verify=False)
+    compact(cstore)
+    b = SteinerSolver(cfg).prepare(cstore).solve(q)
+
+    c = SteinerSolver(cfg).prepare(ref).solve(q)
+
+    ta = np.asarray(a.total_distance)
+    assert np.array_equal(ta, np.asarray(b.total_distance))
+    assert np.array_equal(ta, np.asarray(c.total_distance))
+    assert np.array_equal(np.asarray(a.num_edges), np.asarray(b.num_edges))
+    assert np.array_equal(np.asarray(a.num_edges), np.asarray(c.num_edges))
+
+
+# ----------------------------------------------------------------------------
+# epoch-aware refresh + warm re-solve
+# ----------------------------------------------------------------------------
+
+
+def test_refresh_reuses_executables_and_tracks_epoch(tmp_path):
+    base, n = _rmat_base(9, 5, seed=31)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    handle = SteinerSolver(
+        SolverConfig(backend="single", mode="bucket")
+    ).prepare(store)
+    assert handle.epoch == 0
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(n, size=6, replace=False).astype(np.int32)
+    handle.solve(seeds)
+
+    rep = handle.refresh()  # same epoch → no-op
+    assert rep["refreshed"] == ()
+
+    append_deltas(store, _mixed_ops(rng, n, base, 30))
+    rep = handle.refresh()
+    assert rep["from_epoch"] == 0 and rep["epoch"] == 1
+    assert "graph" in rep["refreshed"]
+    out = handle.solve(seeds)
+    fresh = SteinerSolver(
+        SolverConfig(backend="single", mode="bucket")
+    ).prepare(open_store(path, verify=False)).solve(seeds)
+    assert out.total_distance == fresh.total_distance
+
+
+def test_warm_resolve_bit_exact_vs_cold(tmp_path):
+    base, n = _rmat_base(9, 5, seed=33)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    cfg = SolverConfig(backend="single", mode="dense")
+    handle = SteinerSolver(cfg).prepare(store)
+    rng = np.random.default_rng(1)
+    seeds = rng.choice(n, size=6, replace=False).astype(np.int32)
+    cold0 = handle.solve(seeds)
+
+    ops = _mixed_ops(rng, n, base, 25)
+    info = append_deltas(store, ops)
+    seg = read_segment(path / info["file"], info["epoch"])
+    changed = np.unique(np.concatenate([seg.u, seg.v]).astype(np.int64))
+    handle.refresh()
+
+    warm_init, cells, n_reset = reset_affected(
+        cold0.raw.state, seeds, changed, len(seeds)
+    )
+    warm = handle.solve(seeds, warm_state=warm_init)
+    cold = handle.solve(seeds)
+    assert float(warm.total_distance) == float(cold.total_distance)
+    for f in ("dist", "lab", "pred"):
+        assert np.array_equal(
+            np.asarray(getattr(warm.raw.state, f)),
+            np.asarray(getattr(cold.raw.state, f)),
+        ), f
+
+
+def test_warm_resolve_frontier_bit_exact_vs_cold(tmp_path):
+    """Frontier-mode warm start (violated-edge dirty seeding) converges
+    to the exact same fixpoint as its own cold solve AND as dense."""
+    base, n = _rmat_base(9, 5, seed=34)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    cfg = SolverConfig(backend="single", mode="frontier", frontier_size=64)
+    handle = SteinerSolver(cfg).prepare(store)
+    rng = np.random.default_rng(2)
+    seeds = rng.choice(n, size=6, replace=False).astype(np.int32)
+    cold0 = handle.solve(seeds)
+
+    ops = _mixed_ops(rng, n, base, 25)
+    info = append_deltas(store, ops)
+    seg = read_segment(path / info["file"], info["epoch"])
+    changed = np.unique(np.concatenate([seg.u, seg.v]).astype(np.int64))
+    handle.refresh()
+
+    warm_init, _, _ = reset_affected(
+        cold0.raw.state, seeds, changed, len(seeds)
+    )
+    warm = handle.solve(seeds, warm_state=warm_init)
+    cold = handle.solve(seeds)
+    dense = (
+        SteinerSolver(SolverConfig(backend="single", mode="dense"))
+        .prepare(store)
+        .solve(seeds)
+    )
+    assert float(warm.total_distance) == float(cold.total_distance)
+    assert float(warm.total_distance) == float(dense.total_distance)
+    for f in ("dist", "lab", "pred"):
+        assert np.array_equal(
+            np.asarray(getattr(warm.raw.state, f)),
+            np.asarray(getattr(cold.raw.state, f)),
+        ), f
+    # a fully-converged warm init yields an all-clean dirty set: zero rounds
+    noop = handle.solve(seeds, warm_state=cold.raw.state)
+    assert int(noop.telemetry.iterations) == 0
+    assert float(noop.total_distance) == float(cold.total_distance)
+
+
+def test_warm_state_rejected_off_supported_modes(tmp_path):
+    base, n = _rmat_base(7, 4, seed=35)
+    s, d, w = zip(*base)
+    g = from_edges(
+        np.asarray(s), np.asarray(d), np.asarray(w, np.float32), n
+    )
+    seeds = np.asarray([0, 1, 2, 3], np.int32)
+    st0 = (
+        SteinerSolver(SolverConfig(backend="single", mode="dense"))
+        .prepare(g)
+        .solve(seeds)
+        .raw.state
+    )
+    batch = SteinerSolver(
+        SolverConfig(backend="batch", mode="bucket", batch_size=2)
+    ).prepare(g)
+    with pytest.raises(ValueError):
+        batch.solve(np.stack([seeds, seeds]), warm_state=st0)
+    pallas = SteinerSolver(
+        SolverConfig(backend="single", mode="pallas")
+    ).prepare(g)
+    with pytest.raises(ValueError):
+        pallas.solve(seeds, warm_state=st0)
+
+
+def test_incremental_session_multi_epoch_bit_exact(tmp_path):
+    """The work-proportional epoch loop (ELL patch + warm rounds + pair-
+    table repair) stays bit-identical to a cold solve of the mutated
+    store across chained epochs — state, dmat, tree totals, edge count."""
+    base, n = _rmat_base(9, 8, seed=3)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(n, size=24, replace=False).astype(np.int32)
+    sess = IncrementalSession(
+        store, seeds, ell_width=8, ell_pad_rows=256, frontier_size=32
+    )
+    handle = SteinerSolver(
+        SolverConfig(
+            backend="single", mode="frontier", ell_width=8, frontier_size=32
+        )
+    ).prepare(store)
+    cold = handle.solve(seeds)
+    assert sess.total_distance == float(cold.total_distance)
+    assert np.array_equal(sess.dmat, np.asarray(cold.raw.dmat))
+
+    for _ in range(3):
+        ops = _mixed_ops(rng, n, base, 25)
+        res = sess.apply_deltas(ops)
+        handle.refresh()
+        cold = handle.solve(seeds)
+        assert res.total_distance == float(cold.total_distance)
+        assert res.num_edges == int(cold.num_edges)
+        assert np.array_equal(sess.dmat, np.asarray(cold.raw.dmat))
+        for f in ("dist", "lab", "pred"):
+            assert np.array_equal(
+                np.asarray(getattr(sess.state, f)),
+                np.asarray(getattr(cold.raw.state, f)),
+            ), f
+
+
+def test_ell_patcher_claims_pad_rows_and_exhausts(tmp_path):
+    """Degree growth beyond a vertex's ELL block claims spare padding
+    rows (solve parity preserved); with no spare rows it refuses loudly
+    instead of corrupting the view."""
+    base, n = _rmat_base(8, 4, seed=7)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    rng = np.random.default_rng(1)
+    seeds = rng.choice(n, size=12, replace=False).astype(np.int32)
+    sess = IncrementalSession(
+        store, seeds, ell_width=4, ell_pad_rows=64, frontier_size=32
+    )
+    free0 = sess.patcher.free_rows
+    assert free0 > 0
+    # 40 new edges on one vertex → needs several extra ELL rows
+    hub = int(seeds[0])
+    ops = [
+        ("add", hub, int((hub + 2 + i) % n), float(1 + i % 9))
+        for i in range(40)
+    ]
+    res = sess.apply_deltas(ops)
+    assert sess.patcher.free_rows < free0
+    cold = (
+        SteinerSolver(
+            SolverConfig(
+                backend="single", mode="frontier",
+                ell_width=4, frontier_size=32,
+            )
+        )
+        .prepare(store)
+        .solve(seeds)
+    )
+    assert res.total_distance == float(cold.total_distance)
+    for f in ("dist", "lab", "pred"):
+        assert np.array_equal(
+            np.asarray(getattr(sess.state, f)),
+            np.asarray(getattr(cold.raw.state, f)),
+        ), f
+
+    # no padding at all → the same growth must raise, not alias rows
+    store2 = open_store(
+        build_store(
+            ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+            tmp_path / "g2.gstore",
+        )[0],
+        verify=False,
+    )
+    sess2 = IncrementalSession(
+        store2, seeds, ell_width=4, ell_pad_rows=1, frontier_size=32
+    )
+    with pytest.raises(RuntimeError, match="padding exhausted"):
+        sess2.apply_deltas(ops)
+
+
+def test_effective_adjacency_matches_effective_csr(tmp_path):
+    """The per-vertex overlay gather (the O(deg) primitive under the
+    incremental path) agrees with the full effective CSR."""
+    base, n = _rmat_base(7, 4, seed=5)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    rng = np.random.default_rng(2)
+    append_deltas(store, _mixed_ops(rng, n, base, 30))
+    store.reload()
+    indptr, indices, weights = store.effective_csr()
+    verts = np.unique(rng.integers(0, n, size=20)).astype(np.int64)
+    src, dst, wgt = effective_adjacency(store, verts)
+    for v in verts:
+        sel = src == v
+        got = sorted(zip(dst[sel].tolist(), wgt[sel].tolist()))
+        ref = sorted(
+            zip(
+                indices[indptr[v]:indptr[v + 1]].tolist(),
+                weights[indptr[v]:indptr[v + 1]].tolist(),
+            )
+        )
+        assert got == ref, int(v)
+
+
+def test_entry_survives_label_rule():
+    lab = np.asarray([0, 0, 1, 3, 3], np.int32)  # S=3 → vertices 3,4 unreached
+    assert entry_survives(lab, np.asarray([3, 4]), 3)
+    assert not entry_survives(lab, np.asarray([2, 3]), 3)
+    assert entry_survives(lab, np.asarray([], np.int64), 3)
+
+
+# ----------------------------------------------------------------------------
+# serve-cache invalidation (epoch-aware SteinerServer)
+# ----------------------------------------------------------------------------
+
+
+def test_serve_revalidates_unaffected_and_invalidates_affected(tmp_path):
+    from repro.serve import ServeConfig, SteinerServer
+
+    # component A: ring over 0..15; component B: isolated pair 16-17
+    n = 18
+    s = np.asarray(list(range(16)) + [16])
+    d = np.asarray([(i + 1) % 16 for i in range(16)] + [17])
+    w = np.full(s.shape, 2.0, np.float32)
+    build_store(ArraySource(s, d, w, n), tmp_path / "g.gstore")
+    srv = SteinerServer(
+        graph_path=str(tmp_path / "g.gstore"),
+        config=ServeConfig(max_batch=2, buckets=(4,), mode="bucket"),
+    )
+    r0 = srv.query([0, 5, 9])
+
+    # deltas confined to the unreached component: entry provably survives
+    rep = srv.apply_deltas([("reweight", 16, 17, 7.0)])
+    assert rep["revalidated"] == 1 and rep["invalidated"] == 0
+    r1 = srv.query([0, 5, 9])
+    assert r1.from_cache and r1.total_distance == r0.total_distance
+
+    # deltas inside the served cells: evict + warm re-solve, result moves
+    rep2 = srv.apply_deltas([("reweight", 0, 1, 50.0)])
+    assert rep2["invalidated"] == 1 and rep2["revalidated"] == 0
+    r2 = srv.query([0, 5, 9])
+    assert not r2.from_cache
+    assert r2.total_distance != r0.total_distance
+    st = srv.stats()
+    assert st["epoch"] == 2
+    assert st["cache_invalidations"] == 1
+    assert st["cache_revalidations"] == 1
+    assert st["warm_resolves"] == 1
+    text = srv.prometheus_text()
+    assert "delta_epoch" in text and "cache_invalidations_total" in text
+
+
+def test_serve_never_stale_after_deltas(tmp_path):
+    """Staleness regression: after apply_deltas, every answer matches a
+    fresh server booted from the mutated store — served entries whose
+    cells intersect the changed vertices are never replayed."""
+    from repro.serve import ServeConfig, SteinerServer
+
+    rng = np.random.default_rng(8)
+    base, n = _rmat_base(9, 6, seed=51)
+    s, d, w = zip(*base)
+    build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    cfg = ServeConfig(max_batch=4, mode="bucket")
+    srv = SteinerServer(graph_path=str(tmp_path / "g.gstore"), config=cfg)
+    qsets = [
+        sorted(rng.choice(n, size=6, replace=False).tolist())
+        for _ in range(6)
+    ]
+    srv.query_many(qsets)
+    srv.apply_deltas(_mixed_ops(rng, n, base, 50))
+    got = srv.query_many(qsets)
+    ref_srv = SteinerServer(
+        graph_path=str(tmp_path / "g.gstore"), config=cfg
+    )
+    want = ref_srv.query_many(qsets)
+    for a, b in zip(got, want):
+        assert a.total_distance == b.total_distance
+        assert a.num_edges == b.num_edges
+    st = srv.stats()
+    assert st["epoch"] == 1
+    assert st["warm_resolves"] + st["cache_revalidations"] > 0
+
+
+# ----------------------------------------------------------------------------
+# ell_view_cached version token (regression: id()-keyed memo aliasing)
+# ----------------------------------------------------------------------------
+
+
+def test_ell_memo_version_token_invalidates_and_never_aliases():
+    s = np.asarray([0, 1, 2, 3])
+    d = np.asarray([1, 2, 3, 0])
+    w = np.ones(4, np.float32)
+    g = from_edges(s, d, w, 4)
+    a = ell_view_cached(g, 4)
+    assert ell_view_cached(g, 4) is a
+    # an in-place mutation bumps the version: the memo must rebuild
+    bump_graph_version(g)
+    b = ell_view_cached(g, 4)
+    assert b is not a
+    # a NEW graph object never hits another graph's entry, even if the
+    # allocator hands it a recycled id() — tokens are process-unique
+    del g
+    g2 = from_edges(s, d, w, 4)
+    c = ell_view_cached(g2, 4)
+    assert c is not a and c is not b
+
+
+# ----------------------------------------------------------------------------
+# CLI: append / compact / verify
+# ----------------------------------------------------------------------------
+
+
+def test_cli_append_compact_verify_roundtrip(tmp_path, capsys):
+    from repro.graphstore.__main__ import main
+
+    store = str(tmp_path / "g.gstore")
+    assert main(["--quiet", "build", store, "--scale", "7",
+                 "--edge-factor", "4", "--seed", "3"]) == 0
+    recs = tmp_path / "recs.json"
+    recs.write_text(json.dumps(
+        [["add", 1, 2, 3.5], ["delete", 3, 4], ["reweight", 5, 6, 9.0]]
+    ))
+    capsys.readouterr()
+    assert main(["--quiet", "--json", "append", store,
+                 "--records", str(recs), "--add", "7", "8", "2.5"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["epoch"] == 1 and doc["count"] == 4
+    assert main(["--quiet", "--json", "verify", store]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] and doc["delta_segments"] == 1
+    assert main(["--quiet", "--json", "compact", store]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["records_folded"] == 4 and doc["epoch"] == 1
+    # corrupt one byte → verify exits nonzero
+    with open(tmp_path / "g.gstore" / "weights.bin", "r+b") as h:
+        h.seek(64)
+        byte = h.read(1)
+        h.seek(64)
+        h.write(bytes([byte[0] ^ 0xFF]))
+    capsys.readouterr()
+    assert main(["--quiet", "--json", "verify", store]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is False
+
+
+def test_cli_append_requires_records(tmp_path):
+    from repro.graphstore.__main__ import main
+
+    store = str(tmp_path / "g.gstore")
+    assert main(["--quiet", "build", store, "--scale", "6",
+                 "--edge-factor", "4"]) == 0
+    assert main(["--quiet", "append", store]) == 2
+
+
+# ----------------------------------------------------------------------------
+# scale-14 acceptance tier
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_scale14_thousand_deltas_parity_and_incremental(tmp_path):
+    """ISSUE acceptance: ≥1k mixed deltas at scale 14 — overlay solve ==
+    post-compact solve == full re-ingest solve on all four backends, and
+    compaction rewrites only the affected shard files."""
+    rng = np.random.default_rng(77)
+    base, n = _rmat_base(14, 8, seed=99)
+    s, d, w = zip(*base)
+    path, _ = build_store(
+        ArraySource(np.asarray(s), np.asarray(d), np.asarray(w), n),
+        tmp_path / "g.gstore",
+    )
+    store = open_store(path, verify=False)
+    partition_store(store, n_replica=1, n_blocks=8)
+    partition_ell_store(store, k=16)
+    store = open_store(path, verify=False)
+    # 1200 mixed deltas confined to two vertex blocks
+    nb = store.partition_meta["nb"]
+    local = [(u, v, w_) for (u, v, w_) in base if u < 2 * nb and v < 2 * nb]
+    ops = _mixed_ops(rng, 2 * nb, local, 1200)
+    append_deltas(store, ops[:600])
+    append_deltas(store, ops[600:])
+    # model reference over the FULL base list (ops only touch low ids)
+    ref = reference_store_for(
+        tmp_path, n, base, [ops[:600], ops[600:]]
+    )
+    seeds = rng.choice(n, size=16, replace=False).astype(np.int32)
+
+    mtimes = {f: os.stat(path / f).st_mtime_ns for f in _shard_files(path)}
+    overlay = open_store(path, verify=False)
+    results = {}
+    for backend, kw in BACKENDS:
+        cfg = SolverConfig(backend=backend, mode="bucket", **kw)
+        q = np.stack([seeds, seeds[::-1]]) if backend == "batch" else seeds
+        results[backend] = (
+            np.asarray(SteinerSolver(cfg).prepare(overlay).solve(q)
+                       .total_distance),
+            q,
+            cfg,
+        )
+    stats = compact(store)
+    assert 0 < stats.shard_files_rewritten < stats.shard_files_total
+    kept = [
+        f for f in _shard_files(path)
+        if os.stat(path / f).st_mtime_ns == mtimes[f]
+    ]
+    assert kept  # unaffected shard files preserved byte-for-byte (hardlink)
+    for backend, (ta, q, cfg) in results.items():
+        b = SteinerSolver(cfg).prepare(
+            open_store(path, verify=False)
+        ).solve(q)
+        c = SteinerSolver(cfg).prepare(ref).solve(q)
+        assert np.array_equal(ta, np.asarray(b.total_distance)), backend
+        assert np.array_equal(ta, np.asarray(c.total_distance)), backend
+    verify_store(path)

@@ -60,6 +60,66 @@ def test_voronoi_property(n, p, nseeds, rngseed):
         assert x == seeds[lab[v]]
 
 
+@st.composite
+def _delta_instance(draw):
+    """A small base graph plus a random op interleaving, pre-split into
+    1-3 append segments."""
+    n = draw(st.integers(6, 20))
+    pair = st.tuples(
+        st.integers(0, n - 1), st.integers(0, n - 1)
+    ).filter(lambda t: t[0] != t[1])
+    base = [
+        (u, v, float(w))
+        for ((u, v), w) in draw(
+            st.lists(st.tuples(pair, st.integers(1, 30)),
+                     min_size=3, max_size=40)
+        )
+    ]
+    raw_ops = draw(
+        st.lists(
+            st.tuples(
+                st.sampled_from(["add", "delete", "reweight"]),
+                pair,
+                st.integers(1, 30),
+            ),
+            max_size=30,
+        )
+    )
+    ops = [
+        ("delete", u, v) if kind == "delete" else (kind, u, v, float(w))
+        for (kind, (u, v), w) in raw_ops
+    ]
+    nseg = draw(st.integers(1, 3))
+    cut = sorted(
+        draw(st.lists(st.integers(0, len(ops)), min_size=nseg - 1,
+                      max_size=nseg - 1))
+    )
+    bounds = [0] + cut + [len(ops)]
+    segments = [ops[a:b] for a, b in zip(bounds, bounds[1:])]
+    return n, base, segments
+
+
+@settings(max_examples=25, deadline=None)
+@given(inst=_delta_instance())
+def test_delta_fold_compact_bit_identical_property(inst):
+    """Property: for ANY interleaving of add/delete/reweight records over
+    any base graph, the overlay view and the compacted store are both
+    bit-identical (CSR arrays + weight range) to a fresh ingest of the
+    final edge set in canonical order."""
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    from test_delta import check_append_compact_roundtrip
+
+    n, base, segments = inst
+    tmp = Path(tempfile.mkdtemp(prefix="delta_prop_"))
+    try:
+        check_append_compact_roundtrip(tmp, n, base, segments)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     nv=st.integers(10, 36),
