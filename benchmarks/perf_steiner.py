@@ -105,6 +105,8 @@ def run_handle_bench(args) -> None:
         for q in range(args.queries)
     ]
 
+    first_out = {}  # name -> cold-solve SolveOutput (flight dump source)
+
     def bench_row(name, cfg, mesh_stats=False):
         """One prepare → cold solve → warm-loop measurement (shared by
         the single-backend and mesh rows so every BENCH row is measured
@@ -118,6 +120,7 @@ def run_handle_bench(args) -> None:
         t0 = time.perf_counter()
         first = handle.solve(seed_sets[0])
         t_cold = time.perf_counter() - t0
+        first_out[name] = first
 
         lat = []
         for s in seed_sets:
@@ -166,11 +169,13 @@ def run_handle_bench(args) -> None:
     # the messages/relaxations counters (paper Fig. 5/6 work metrics)
     mesh_specs = {
         "mesh_bucket": SolverConfig(
-            backend="mesh1d", mode="bucket", mesh_shape=(1, 1)
+            backend="mesh1d", mode="bucket", mesh_shape=(1, 1),
+            telemetry_per_rank=args.per_rank,
         ),
         "mesh_frontier": SolverConfig(
             backend="mesh1d", mode="frontier", mesh_shape=(1, 1),
             ell_width=32, frontier_size=256,
+            telemetry_per_rank=args.per_rank,
         ),
     }
     for name, cfg in mesh_specs.items():
@@ -211,6 +216,20 @@ def run_handle_bench(args) -> None:
     if args.metrics:
         Path(args.metrics).write_text(obs.prometheus_text())
         print(f"wrote {args.metrics}")
+    if args.flight:
+        from repro.obs import flight as flightmod
+
+        t = first_out["mesh_frontier"].telemetry
+        if t is None or t.per_rank is None:
+            raise SystemExit("--flight requires --per-rank")
+        flightmod.dump_flight(
+            args.flight,
+            t.per_rank,
+            label="mesh1d/frontier",
+            per_round=t.per_round,
+            extra={"graph": graph_desc, "num_seeds": args.num_seeds},
+        )
+        print(f"wrote {args.flight}")
 
 
 # ----------------------------------------------------------------------------
@@ -325,6 +344,13 @@ def main() -> None:
                          "per-round convergence counters; Perfetto-loadable)")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="dump obs metrics in Prometheus text format")
+    ap.add_argument("--per-rank", action="store_true",
+                    help="record the per-rank flight buffer on the mesh "
+                         "rows (SolverConfig.telemetry_per_rank)")
+    ap.add_argument("--flight", default=None, metavar="PATH",
+                    help="dump the mesh_frontier flight recording as JSON "
+                         "(for `python -m repro.obs report`; needs "
+                         "--per-rank)")
     # roofline bench
     ap.add_argument("--cell", default="ukw_1k")
     ap.add_argument("--variants", default="base,unfused,lab_i16,ls2,ls4,boruvka")

@@ -296,6 +296,11 @@ class DistSteinerConfig:
     # fixpoint loop. 0 keeps the raw engine lean; the solver passes its
     # SolverConfig.telemetry_rounds explicitly.
     telemetry_rounds: int = 0
+    # static flag: additionally carry a replicated (H+1, n_ranks, 4)
+    # per-rank buffer (all_gather of the per-device channel rows) — the
+    # flight recorder behind repro.obs.flight.  Disabled, the buffer has
+    # zero rank slots and the per-rank collectives are never traced.
+    telemetry_per_rank: bool = False
 
     def __post_init__(self) -> None:
         if self.mode not in ("dense", "bucket", "frontier"):
@@ -327,6 +332,11 @@ class DistSteinerConfig:
         if self.telemetry_rounds < 0:
             raise ValueError(
                 f"telemetry_rounds must be >= 0, got {self.telemetry_rounds}"
+            )
+        if self.telemetry_per_rank and self.telemetry_rounds < 1:
+            raise ValueError(
+                "telemetry_per_rank requires telemetry_rounds >= 1 "
+                "(the per-rank flight recorder rides the round buffer)"
             )
 
 
@@ -419,7 +429,8 @@ def make_dist_steiner(
         return out.reshape(-1)[: S * S]
 
     def finish(
-        dist_l, lab_l, pred_l, esrc, edst, ew, off, gids, iters, rlx, msg, hist
+        dist_l, lab_l, pred_l, esrc, edst, ew, off, gids, iters, rlx, msg,
+        hist, histr,
     ):
         """Stages 2-6 after Voronoi convergence (shared by every mode):
         pair tables → Allreduce(MIN) → replicated MST → bridge pruning →
@@ -502,6 +513,7 @@ def make_dist_steiner(
             nedges,
             stats,
             hist,
+            histr,
         )
 
     # per-round telemetry row (obs.ROUND_CHANNELS): all channels are
@@ -519,6 +531,34 @@ def make_dist_steiner(
             - n_ghost
         )
         return jnp.stack([front.astype(jnp.float32), dmsg, imp, unr])
+
+    # ---- per-rank flight recorder (cfg.telemetry_per_rank) ----
+    # Rank = linear device index in (replica..., vert) axis order, so the
+    # all_gather'd rows land at rank r*n_blocks + b.  Disabled, the buffer
+    # carries zero rank slots and no per-rank collective is ever traced —
+    # the round loop is textually identical to the global-only path.
+    per_rank = cfg.telemetry_per_rank
+    n_rep_total = 1
+    for _a in replica_axes:
+        n_rep_total *= mesh.shape[_a]
+    n_ranks = n_rep_total * n_blocks if per_rank else 0
+    histr_init = jnp.zeros(
+        (cfg.telemetry_rounds + 1, n_ranks, 4), jnp.float32
+    )
+
+    def histr_write(histr, it, rows):
+        H = histr.shape[0] - 1
+        return jax.lax.dynamic_update_slice(
+            histr, rows[None], (jnp.minimum(it, H), 0, 0)
+        )
+
+    def rank_rows(front_l, msg_l, imp_l, unr_l):
+        """All-gather this device's channel row → replica-uniform
+        (n_ranks, 4).  Callers pre-gate replica-uniform block channels to
+        the replica-0 rank so the per-rank rows sum exactly (integer f32
+        counts) to the global channels."""
+        row = jnp.stack([front_l, msg_l, imp_l, unr_l])
+        return jax.lax.all_gather(row, all_axes, tiled=False)
 
     def body(src, dst, w, seeds):
         my_blk = jax.lax.axis_index(vert_axis)
@@ -584,9 +624,16 @@ def make_dist_steiner(
             p = jax.lax.pmin(pc, replica_axes)
             return d, l, p
 
+        if per_rank:
+            # block-state channels (frontier/relaxations/unreached) are
+            # replica-uniform; attribute them to each block's replica-0
+            # rank so per-rank rows sum exactly to the global channels.
+            is_r0 = sum(jax.lax.axis_index(a) for a in replica_axes) == 0
+            my_ghost = jnp.sum(gids >= cfg.n).astype(jnp.float32)
+
         # ---- VORONOI_CELL_ASYNC (paper Alg. 4)
         def vbody(carry):
-            dist_l, lab_l, pred_l, theta, it, rlx, msg, _, hist = carry
+            dist_l, lab_l, pred_l, theta, it, rlx, msg, _, hist, histr = carry
             distf, labf = gather_state(dist_l, lab_l)
 
             def inner(i, c):
@@ -602,26 +649,32 @@ def make_dist_steiner(
                 jnp.any(dl != dist_l) | jnp.any(ll != lab_l) | jnp.any(pl != pred_l)
             )
             changed = jax.lax.pmax(changed_l.astype(jnp.int32), all_axes) > 0
-            imp = jax.lax.psum(
-                jnp.sum((dl != dist_l) | (ll != lab_l) | (pl != pred_l)).astype(
-                    jnp.float32
-                ),
-                (vert_axis,),
-            )
+            imp_l = jnp.sum(
+                (dl != dist_l) | (ll != lab_l) | (pl != pred_l)
+            ).astype(jnp.float32)
+            imp = jax.lax.psum(imp_l, (vert_axis,))
             msg_g = jax.lax.psum(msg_i, all_axes)
             if cfg.mode == "bucket":
                 # frontier = vertices under the bucket threshold this round
-                front = jax.lax.psum(
-                    jnp.sum(jnp.isfinite(dl) & (dl <= theta)).astype(
-                        jnp.float32
-                    ),
-                    (vert_axis,),
-                )
+                front_l = jnp.sum(
+                    jnp.isfinite(dl) & (dl <= theta)
+                ).astype(jnp.float32)
+                front = jax.lax.psum(front_l, (vert_axis,))
             else:
                 # dense has no explicit frontier; its active set IS the
                 # improved-vertex set
+                front_l = imp_l
                 front = imp
             hist = _hist_write(hist, it, round_row(front, msg_g, imp, dl))
+            if per_rank:
+                z = jnp.float32(0.0)
+                unr_l = jnp.sum(~jnp.isfinite(dl)).astype(jnp.float32) - my_ghost
+                histr = histr_write(histr, it, rank_rows(
+                    jnp.where(is_r0, front_l, z),
+                    msg_i,
+                    jnp.where(is_r0, imp_l, z),
+                    jnp.where(is_r0, unr_l, z),
+                ))
             if cfg.mode == "bucket":
                 # terminate only on a no-change round with every source active
                 mx_l = jnp.max(jnp.where(jnp.isfinite(dl), dl, -INF))
@@ -631,13 +684,18 @@ def make_dist_steiner(
                 work = ~done
             else:
                 work = changed
-            return (dl, ll, pl, theta, it + 1, rlx + imp, msg + msg_g, work, hist)
+            return (
+                dl, ll, pl, theta, it + 1, rlx + imp, msg + msg_g, work,
+                hist, histr,
+            )
 
         def vcond(carry):
-            _, _, _, _, it, _, _, work, _ = carry
+            _, _, _, _, it, _, _, work, _, _ = carry
             return work & (it < cap)
 
-        dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
+        (
+            dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist, histr
+        ) = jax.lax.while_loop(
             vcond,
             vbody,
             (
@@ -650,11 +708,13 @@ def make_dist_steiner(
                 jnp.float32(0.0),
                 jnp.bool_(True),
                 hist_init,
+                histr_init,
             ),
         )
 
         return finish(
-            dist_l, lab_l, pred_l, src, dst, w, off, gids, iters, rlx, msg, hist
+            dist_l, lab_l, pred_l, src, dst, w, off, gids, iters, rlx, msg,
+            hist, histr,
         )
 
     def frontier_body(nbr, wgt, row2v, seeds):
@@ -686,8 +746,15 @@ def make_dist_steiner(
         has_edges = jnp.any(jnp.isfinite(wgt), axis=1)
         dirty0 = jnp.isin(row2v, seeds) & has_edges
 
+        if per_rank:
+            # frontier pops and message attempts are genuinely per-device
+            # here; only the block-state channels (relaxations/unreached)
+            # need replica-0 attribution.
+            is_r0 = sum(jax.lax.axis_index(a) for a in replica_axes) == 0
+            my_ghost = jnp.sum(gids >= cfg.n).astype(jnp.float32)
+
         def vbody(carry):
-            dist_l, lab_l, pred_l, dirty, it, rlx, msg, _, hist = carry
+            dist_l, lab_l, pred_l, dirty, it, rlx, msg, _, hist, histr = carry
             # --- the priority queue: top-K lowest-distance dirty rows
             rowdist = jnp.where(dirty, dist_l[lrow], INF)
             _, rows = jax.lax.top_k(-rowdist, K)
@@ -734,25 +801,39 @@ def make_dist_steiner(
             # rows of updated vertices become dirty again (their replicas
             # compute the same upd, so every shard of v's rows agrees)
             dirty = dirty | (upd[lrow] & has_edges)
-            imp = jax.lax.psum(jnp.sum(upd).astype(jnp.float32), (vert_axis,))
+            imp_l = jnp.sum(upd).astype(jnp.float32)
+            imp = jax.lax.psum(imp_l, (vert_axis,))
             att = jnp.sum(jnp.isfinite(flat_cand)).astype(jnp.float32)
             msg_g = jax.lax.psum(att, all_axes)
             # frontier = rows actually popped across every per-device queue
-            front = jax.lax.psum(
-                jnp.sum(sel_ok).astype(jnp.float32), all_axes
-            )
+            front_l = jnp.sum(sel_ok).astype(jnp.float32)
+            front = jax.lax.psum(front_l, all_axes)
             hist = _hist_write(hist, it, round_row(front, msg_g, imp, dist_l))
+            if per_rank:
+                z = jnp.float32(0.0)
+                unr_l = (
+                    jnp.sum(~jnp.isfinite(dist_l)).astype(jnp.float32)
+                    - my_ghost
+                )
+                histr = histr_write(histr, it, rank_rows(
+                    front_l,
+                    att,
+                    jnp.where(is_r0, imp_l, z),
+                    jnp.where(is_r0, unr_l, z),
+                ))
             work = jax.lax.pmax(jnp.any(dirty).astype(jnp.int32), all_axes) > 0
             return (
                 dist_l, lab_l, pred_l, dirty, it + 1, rlx + imp, msg + msg_g,
-                work, hist,
+                work, hist, histr,
             )
 
         def vcond(carry):
-            _, _, _, _, it, _, _, work, _ = carry
+            _, _, _, _, it, _, _, work, _, _ = carry
             return work & (it < cap)
 
-        dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
+        (
+            dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist, histr
+        ) = jax.lax.while_loop(
             vcond,
             vbody,
             (
@@ -765,6 +846,7 @@ def make_dist_steiner(
                 jnp.float32(0.0),
                 jnp.bool_(True),
                 hist_init,
+                histr_init,
             ),
         )
         # my shard's directed edges, flattened from the ELL rows (padding
@@ -772,7 +854,7 @@ def make_dist_steiner(
         esrc = jnp.broadcast_to(row2v[:, None], nbr.shape).reshape(-1)
         return finish(
             dist_l, lab_l, pred_l, esrc, nbr.reshape(-1), wgt.reshape(-1),
-            off, gids, iters, rlx, msg, hist,
+            off, gids, iters, rlx, msg, hist, histr,
         )
 
     if cfg.mode == "frontier":
@@ -800,6 +882,7 @@ def make_dist_steiner(
             rep,
             rep,
             rep,  # hist — global counts, replica-uniform
+            rep,  # histr — all-gathered per-rank rows, replica-uniform
         ),
         check_vma=False,
     )
@@ -830,6 +913,9 @@ class DistSteinerResult:
     # (H+1, 4) per-round telemetry (obs.ROUND_CHANNELS rows); None when
     # the pipeline ran with telemetry_rounds=0
     history: Optional[np.ndarray] = None
+    # (H+1, n_ranks, 4) per-rank flight-recorder buffer; None unless the
+    # pipeline ran with telemetry_per_rank=True
+    per_rank: Optional[np.ndarray] = None
 
     def edge_set(self):
         out = set()
@@ -843,7 +929,7 @@ class DistSteinerResult:
 
 
 def result_from_device(out, n: int) -> DistSteinerResult:
-    """Converts the raw 13-tuple pipeline output to a host-side result."""
+    """Converts the raw 14-tuple pipeline output to a host-side result."""
     (
         dist,
         lab,
@@ -858,6 +944,7 @@ def result_from_device(out, n: int) -> DistSteinerResult:
         ne,
         stats,
         hist,
+        histr,
     ) = [np.asarray(x) for x in out]
     return DistSteinerResult(
         dist=dist[:n],
@@ -875,6 +962,7 @@ def result_from_device(out, n: int) -> DistSteinerResult:
         relaxations=float(stats[1]),
         messages=float(stats[2]),
         history=hist if hist.shape[0] > 1 else None,
+        per_rank=histr if histr.shape[1] > 0 else None,
     )
 
 

@@ -128,6 +128,7 @@ def make_dist_steiner_2d(
     row_axis: str = "data",
     col_axis: str = "model",
     telemetry_rounds: int = 0,
+    telemetry_per_rank: bool = False,
 ):
     """Jitted 2D pipeline: fn(src_row, dst_col, w, seeds) → same outputs as
     the 1D engine (state in fine-block order = plain vertex order)."""
@@ -136,6 +137,11 @@ def make_dist_steiner_2d(
     if telemetry_rounds < 0:
         raise ValueError(
             f"telemetry_rounds must be >= 0, got {telemetry_rounds}"
+        )
+    if telemetry_per_rank and telemetry_rounds < 1:
+        raise ValueError(
+            "telemetry_per_rank requires telemetry_rounds >= 1 "
+            "(the per-rank flight recorder rides the round buffer)"
         )
     R = mesh.shape[row_axis]
     C = mesh.shape[col_axis]
@@ -179,9 +185,17 @@ def make_dist_steiner_2d(
         col_pos = r_idx * nf  # slice offset within the column range
 
         hist_init = jnp.zeros((telemetry_rounds + 1, 4), jnp.float32)
+        # per-rank flight recorder: every channel is genuinely per-device
+        # on the 2D mesh (state slices are disjoint), so the rank row is
+        # just this device's local counts; rank = r*C + c via the
+        # (row, col) all_gather order.  Disabled → zero rank slots.
+        n_ranks = R * C if telemetry_per_rank else 0
+        histr_init = jnp.zeros((telemetry_rounds + 1, n_ranks, 4), jnp.float32)
+        if telemetry_per_rank:
+            my_ghost = jnp.sum(gids >= n).astype(jnp.float32)
 
         def vbody(carry):
-            dist_l, lab_l, pred_l, theta, it, rlx, msg, _, hist = carry
+            dist_l, lab_l, pred_l, theta, it, rlx, msg, _, hist, histr = carry
             # gather (dist, lab) of MY ROW's vertex range — n/R wire
             packed = jnp.stack([dist_l, lab_l.astype(jnp.float32)], axis=0)
             rowst = jax.lax.all_gather(packed, col_axis, axis=1, tiled=True)
@@ -225,17 +239,17 @@ def make_dist_steiner_2d(
             # state slices are disjoint across the 2D mesh (each device
             # owns one fine block), so a psum over both axes is the
             # global count — the paper's per-round work metrics
-            imp = jax.lax.psum(jnp.sum(upd).astype(jnp.float32), both)
+            imp_l = jnp.sum(upd).astype(jnp.float32)
+            imp = jax.lax.psum(imp_l, both)
             att = jnp.sum(jnp.isfinite(cand)).astype(jnp.float32)
             msg_g = jax.lax.psum(att, both)
             if mode == "bucket":
-                front = jax.lax.psum(
-                    jnp.sum(jnp.isfinite(nd) & (nd <= theta)).astype(
-                        jnp.float32
-                    ),
-                    both,
-                )
+                front_l = jnp.sum(
+                    jnp.isfinite(nd) & (nd <= theta)
+                ).astype(jnp.float32)
+                front = jax.lax.psum(front_l, both)
             else:
+                front_l = imp_l
                 front = imp
             unr = (
                 jax.lax.psum(
@@ -246,6 +260,14 @@ def make_dist_steiner_2d(
             hist = _hist_write(
                 hist, it, jnp.stack([front, msg_g, imp, unr])
             )
+            if telemetry_per_rank:
+                unr_l = jnp.sum(~jnp.isfinite(nd)).astype(jnp.float32) - my_ghost
+                row = jnp.stack([front_l, att, imp_l, unr_l])
+                rows = jax.lax.all_gather(row, both, tiled=False)
+                H = histr.shape[0] - 1
+                histr = jax.lax.dynamic_update_slice(
+                    histr, rows[None], (jnp.minimum(it, H), 0, 0)
+                )
             if mode == "bucket":
                 mx = jnp.max(jnp.where(jnp.isfinite(nd), nd, -INF))
                 max_fin = jax.lax.pmax(mx, both)
@@ -255,14 +277,17 @@ def make_dist_steiner_2d(
             else:
                 work = changed
             return (
-                nd, nl, npd, theta, it + 1, rlx + imp, msg + msg_g, work, hist
+                nd, nl, npd, theta, it + 1, rlx + imp, msg + msg_g, work,
+                hist, histr,
             )
 
         def vcond(carry):
-            _, _, _, _, it, _, _, work, _ = carry
+            _, _, _, _, it, _, _, work, _, _ = carry
             return work & (it < cap)
 
-        dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist = jax.lax.while_loop(
+        (
+            dist_l, lab_l, pred_l, _, iters, rlx, msg, _, hist, histr
+        ) = jax.lax.while_loop(
             vcond,
             vbody,
             (
@@ -275,6 +300,7 @@ def make_dist_steiner_2d(
                 jnp.float32(0.0),
                 jnp.bool_(True),
                 hist_init,
+                histr_init,
             ),
         )
 
@@ -334,7 +360,7 @@ def make_dist_steiner_2d(
         ) + jnp.sum(bvalid).astype(jnp.int32)
         stats = jnp.stack([iters.astype(jnp.float32), rlx, msg])
         return (dist_l, lab_l, pred_l, marked_l, path_edge_l,
-                bu, bv, bw, bvalid, total, nedges, stats, hist)
+                bu, bv, bw, bvalid, total, nedges, stats, hist, histr)
 
     espec = P((row_axis, col_axis))
     st = P((row_axis, col_axis))
@@ -348,6 +374,7 @@ def make_dist_steiner_2d(
         out_specs=(
             st, st, st, st, st, rep, rep, rep, rep, rep, rep, rep,
             rep,  # hist — global counts, uniform across the mesh
+            rep,  # histr — all-gathered per-rank rows, uniform
         ),
         check_vma=False,
     )

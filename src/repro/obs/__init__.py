@@ -181,6 +181,7 @@ def emit_round_telemetry(
     label: str,
     tid: int = 0,
     extra_args: Optional[Dict[str, object]] = None,
+    per_rank=None,
 ) -> None:
     """Renders per-round convergence telemetry into the trace.
 
@@ -190,7 +191,11 @@ def emit_round_telemetry(
     solve interval — flagged ``synthetic_timing`` so trace readers don't
     mistake them for measured durations.  Counter events at each round
     boundary draw the convergence curves (frontier/messages/relaxations/
-    unreached) as Perfetto tracks.  No-op when tracing is off or the
+    unreached) as Perfetto tracks.  ``per_rank`` — the (R, n_ranks, 4)
+    flight-recorder buffer, when the solve ran with
+    ``telemetry_per_rank=True`` — additionally renders one
+    ``rank[{label}/{r}]`` counter track per mesh device, making load
+    imbalance visible round by round.  No-op when tracing is off or the
     solve recorded zero rounds.
     """
     if not tracing() or per_round is None:
@@ -215,3 +220,12 @@ def emit_round_telemetry(
         _tracer.add_counter(
             f"convergence[{label}]", t_start + r * dt, values, tid=tid
         )
+    if per_rank is not None:
+        for r in range(min(rounds, int(per_rank.shape[0]))):
+            t = t_start + r * dt
+            for k in range(int(per_rank.shape[1])):
+                vals = {
+                    c: float(per_rank[r, k, i])
+                    for i, c in enumerate(ROUND_CHANNELS)
+                }
+                _tracer.add_counter(f"rank[{label}/{k}]", t, vals, tid=tid)

@@ -1,10 +1,21 @@
-"""CLI validator for obs artifacts: ``python -m repro.obs validate``.
+"""CLI surface of repro.obs: validate / bench / report.
 
-CI's traced-solve smoke step runs a frontier solve with ``--trace`` /
-``--metrics`` and then calls this to assert the Chrome trace is
-schema-clean (monotonic ts, paired B/E or complete X events) and the
-Prometheus dump parses.  Exit 0 on success, 1 with a reason on stderr
-otherwise.
+``validate`` — CI's traced-solve smoke step runs a frontier solve with
+``--trace`` / ``--metrics`` and then calls this to assert the Chrome
+trace is schema-clean (monotonic ts, paired B/E or complete X events)
+and the Prometheus dump parses.
+
+``bench`` — the continuous perf-regression gate: runs the pinned
+small-scale bench configurations (:mod:`repro.obs.regress`), appends
+env-stamped rows to BENCH_HISTORY.jsonl, and exits 1 when any metric
+regresses past its noise-aware threshold vs the committed baselines
+(``--update-baseline`` refreshes them instead of gating).
+
+``report`` — renders a dumped flight recording (``--flight`` from
+``benchmarks.perf_steiner``) as a text or markdown load-imbalance
+report, including the bit-exact per-rank/global consistency check.
+
+Exit 0 on success, nonzero with a reason on stderr otherwise.
 """
 
 from __future__ import annotations
@@ -49,6 +60,76 @@ def _cmd_validate(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_bench(args: argparse.Namespace) -> int:
+    from . import regress
+
+    factor = regress.injection_factor()
+    if factor != 1.0:
+        print(f"NOTE: {regress.INJECT_ENV}={factor} — injected slowdown")
+    k = args.k if args.k is not None else (3 if args.quick else 5)
+    try:
+        results = regress.run_bench(args.only, k=k, quick=args.quick)
+    except KeyError as e:
+        print(f"bench failed: {e}", file=sys.stderr)
+        return 1
+    rows = regress.append_history(
+        args.history, results, quick=args.quick, k=k, injected=factor
+    )
+    print(f"appended {rows} rows to {args.history}")
+
+    if args.update_baseline:
+        regress.write_baseline(args.baseline, results)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    try:
+        baselines = regress.load_baseline(args.baseline)
+    except FileNotFoundError:
+        print(
+            f"WARNING: no baseline file at {args.baseline} — "
+            "run with --update-baseline to create one",
+            file=sys.stderr,
+        )
+        return 1 if args.strict else 0
+    verdicts = regress.compare(
+        results, baselines, z=args.z, max_ratio=args.max_ratio
+    )
+    print(regress.render_verdicts(verdicts))
+    bad = [v.metric for v in verdicts if v.status == "regress"]
+    missing = [v.metric for v in verdicts if v.status == "missing"]
+    if missing:
+        print(f"WARNING: no baseline for: {missing}", file=sys.stderr)
+        if args.strict:
+            return 1
+    if bad:
+        print(f"PERF REGRESSION: {bad}", file=sys.stderr)
+        return 1
+    print("perf gate: ok")
+    return 0
+
+
+def _cmd_report(args: argparse.Namespace) -> int:
+    from . import flight
+
+    try:
+        doc = flight.load_flight(args.flight)
+        per_rank = doc["per_rank"]
+        label = args.label or str(doc.get("label", ""))
+        if doc.get("per_round") is not None:
+            flight.check_consistency(per_rank, doc["per_round"], label=label)
+        report = flight.analyze(per_rank, label=label)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        print(f"flight report failed: {e}", file=sys.stderr)
+        return 1
+    print(
+        flight.render_report(
+            report, fmt="markdown" if args.markdown else "text", top=args.top
+        ),
+        end="",
+    )
+    return 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(prog="python -m repro.obs")
     sub = p.add_subparsers(dest="cmd", required=True)
@@ -64,7 +145,45 @@ def main(argv=None) -> int:
     )
     pv.set_defaults(fn=_cmd_validate)
 
+    pb = sub.add_parser("bench", help="run pinned benches + perf-regression gate")
+    pb.add_argument(
+        "--quick", action="store_true",
+        help="CI-sized configurations (smaller k and workloads)",
+    )
+    pb.add_argument("--k", type=int, default=None, help="samples per metric")
+    pb.add_argument(
+        "--only", action="append", default=None,
+        help="bench group to run: steiner|serve|ingest (repeatable)",
+    )
+    pb.add_argument("--history", default="BENCH_HISTORY.jsonl")
+    pb.add_argument("--baseline", default="BENCH_BASELINES.json")
+    pb.add_argument(
+        "--update-baseline", action="store_true",
+        help="write measurements as the new baseline instead of gating",
+    )
+    pb.add_argument("--z", type=float, default=None, help="MAD multiplier")
+    pb.add_argument(
+        "--max-ratio", type=float, default=None,
+        help="override every metric's policy ratio",
+    )
+    pb.add_argument(
+        "--strict", action="store_true",
+        help="missing baselines fail instead of warn",
+    )
+    pb.set_defaults(fn=_cmd_bench)
+
+    pr = sub.add_parser("report", help="render a per-rank flight recording")
+    pr.add_argument("flight", help="flight JSON (perf_steiner --flight)")
+    pr.add_argument("--markdown", action="store_true")
+    pr.add_argument("--label", default=None)
+    pr.add_argument("--top", type=int, default=5, help="stragglers to list")
+    pr.set_defaults(fn=_cmd_report)
+
     args = p.parse_args(argv)
+    if args.cmd == "bench" and args.z is None:
+        from . import regress
+
+        args.z = regress.DEFAULT_Z
     return args.fn(args)
 
 

@@ -54,6 +54,12 @@ def _escape(v: str) -> str:
     return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
 
 
+def _escape_help(v: str) -> str:
+    # HELP text escapes only backslash and newline (no quotes) per the
+    # exposition-format spec; an unescaped newline would corrupt the dump.
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 class Counter:
     """Monotonically increasing count."""
 
@@ -217,7 +223,7 @@ class MetricsRegistry:
             kind = self._kinds[name]
             help = self._help.get(name, "")
             if help:
-                lines.append(f"# HELP {name} {help}")
+                lines.append(f"# HELP {name} {_escape_help(help)}")
             lines.append(
                 f"# TYPE {name} {'summary' if kind == 'histogram' else kind}"
             )
@@ -238,20 +244,39 @@ class MetricsRegistry:
         return "\n".join(lines) + "\n"
 
 
+# A label body is a comma-separated list of name="value" items whose
+# quoted values may contain escaped quotes/backslashes — and therefore
+# also literal '}' and ',' characters, which is exactly what the old
+# naive r"\{[^}]*\}" matcher could not survive.
+_LABEL_ITEM = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
-    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"(?:\{(?P<labels>(?:" + _LABEL_ITEM + r"(?:," + _LABEL_ITEM + r")*)?,?)\})?"
     r"\s+(?P<value>[^\s]+)\s*$"
 )
+_LABEL_ITEM_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"'
+)
+_UNESCAPE_RE = re.compile(r"\\(.)")
+_UNESCAPE_MAP = {"n": "\n", '"': '"', "\\": "\\"}
+
+
+def _unescape(v: str) -> str:
+    return _UNESCAPE_RE.sub(
+        lambda m: _UNESCAPE_MAP.get(m.group(1), m.group(0)), v
+    )
 
 
 def parse_prometheus(text: str) -> Dict[str, float]:
-    """Parses Prometheus text exposition into ``{sample_line: value}``.
+    """Parses Prometheus text exposition into ``{sample_key: value}``.
 
     A validation-grade parser (used by ``python -m repro.obs validate``
     and CI), not a full client: it checks that every non-comment line is
     a well-formed ``name[{labels}] value`` sample with a finite float
-    value, and raises ValueError otherwise.
+    value, and raises ValueError otherwise.  Label values are unescaped
+    and re-serialized canonically (sorted label names, re-escaped), so
+    the keys round-trip :meth:`MetricsRegistry.prometheus_text` exactly —
+    including values containing ``"``, ``\\``, ``}``, ``,`` or newlines.
     """
     out: Dict[str, float] = {}
     for lineno, line in enumerate(text.splitlines(), 1):
@@ -267,6 +292,16 @@ def parse_prometheus(text: str) -> Dict[str, float]:
             raise ValueError(
                 f"line {lineno}: bad sample value {m.group('value')!r}"
             ) from None
-        key = m.group("name") + ("{" + m.group("labels") + "}" if m.group("labels") else "")
+        labels_txt = m.group("labels")
+        if labels_txt:
+            pairs = tuple(
+                sorted(
+                    (lm.group(1), _unescape(lm.group(2)))
+                    for lm in _LABEL_ITEM_RE.finditer(labels_txt)
+                )
+            )
+            key = m.group("name") + _fmt_labels(pairs)
+        else:
+            key = m.group("name")
         out[key] = value
     return out

@@ -25,11 +25,32 @@ accelerator stack is absent.
 
 from __future__ import annotations
 
+import atexit
 import contextlib
 import json
+import os
+import sys
 import threading
 import time
+import weakref
 from typing import Any, Dict, List, Optional
+
+# Live tracers, flushed at interpreter exit so spans still open inside a
+# `with span()` (daemon threads, os._exit-adjacent teardown) are recorded
+# instead of silently dropped.
+_LIVE_TRACERS: "weakref.WeakSet[Tracer]" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_leaked_spans() -> None:
+    for tr in list(_LIVE_TRACERS):
+        leaked = tr.flush_open_spans()
+        if leaked:
+            print(
+                f"repro.obs: flushed {len(leaked)} span(s) still open at "
+                f"interpreter exit: {', '.join(sorted(set(leaked)))}",
+                file=sys.stderr,
+            )
 
 
 class Tracer:
@@ -40,6 +61,8 @@ class Tracer:
         self._lock = threading.Lock()
         self._t0 = time.perf_counter()
         self._process_name = process_name
+        self._open: Dict[object, tuple] = {}
+        _LIVE_TRACERS.add(self)
 
     def _us(self, t: float) -> float:
         return (t - self._t0) * 1e6
@@ -48,10 +71,28 @@ class Tracer:
     def span(self, name: str, tid: int = 0, **args):
         """Times a block; records one X event when it exits (even on error)."""
         start = time.perf_counter()
+        token = object()
+        with self._lock:
+            self._open[token] = (name, start, tid, args)
         try:
             yield self
         finally:
+            with self._lock:
+                self._open.pop(token, None)
             self.add_span(name, start, time.perf_counter(), tid=tid, **args)
+
+    def flush_open_spans(self) -> List[str]:
+        """Records every still-open ``span()`` scope as ending now.
+
+        Returns the names flushed (normally empty — the atexit hook calls
+        this for scopes the interpreter tears down mid-block)."""
+        with self._lock:
+            pending = list(self._open.values())
+            self._open.clear()
+        end = time.perf_counter()
+        for name, start, tid, args in pending:
+            self.add_span(name, start, end, tid=tid, leaked=True, **args)
+        return [name for name, _, _, _ in pending]
 
     def add_span(
         self, name: str, t_start: float, t_end: float, tid: int = 0, **args
@@ -125,8 +166,12 @@ class Tracer:
         return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
 
     def export_chrome(self, path: str) -> None:
-        with open(path, "w") as f:
+        """Atomic write (tmp + rename), like the graphstore manifests — a
+        crash mid-dump can't leave a truncated trace behind."""
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(self.chrome_trace(), f)
+        os.replace(tmp, path)
 
 
 def validate_chrome_trace(doc: Any) -> int:

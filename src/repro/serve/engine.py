@@ -263,6 +263,15 @@ class SteinerServer:
             "delta_epoch", "delta-log epoch this server is serving"
         )
         self._g_epoch.set(float(self.epoch or 0))
+        # pad_waste and queue depth existed only as derived stats() values;
+        # as gauges they ride the scrape endpoint alongside the counters
+        self._g_pad_waste = self.metrics.gauge(
+            "serve_pad_waste",
+            "fraction of executed lanes that were padding",
+        )
+        self._g_queue_depth = self.metrics.gauge(
+            "serve_queue_depth", "queries currently queued across buckets"
+        )
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -291,6 +300,7 @@ class SteinerServer:
         if self._t_first is None:
             self._t_first = now
         self._queues[p.bucket].append(_Pending(ticket=t, plan=p, t_submit=now))
+        self._g_queue_depth.set(float(self.pending()))
         return t
 
     def pending(self) -> int:
@@ -629,11 +639,15 @@ class SteinerServer:
                         for p, _, _ in reversed(riders):
                             queue.appendleft(p)
                         self._ready = out
+                        self._g_queue_depth.set(float(self.pending()))
                         raise
                     t_done = time.perf_counter()
                     self._m_batches[bucket].inc()
                     self._m_lanes.inc(B)
                     self._m_padded.inc(B - n_real)
+                    self._g_pad_waste.set(
+                        self._m_padded.value / self._m_lanes.value
+                    )
                     capture = (
                         self._store is not None
                         and self.config.state_capacity > 0
@@ -686,6 +700,7 @@ class SteinerServer:
                         results=len(riders),
                     )
                 self._t_last = t_done
+        self._g_queue_depth.set(float(self.pending()))
         return out
 
     # ------------------------------------------------------------------

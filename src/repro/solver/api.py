@@ -198,6 +198,7 @@ class PreparedGraph:
                 t0,
                 t1,
                 label=f"{self.backend}/{cfg.mode}",
+                per_rank=out.telemetry.per_rank,
             )
         return out
 

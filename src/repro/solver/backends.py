@@ -683,6 +683,7 @@ class Mesh1DBackend(_Backend):
                 res.messages,
                 res.history,
                 cfg.telemetry_rounds,
+                per_rank=res.per_rank,
             ),
         )
 
@@ -736,6 +737,7 @@ class Mesh1DBackend(_Backend):
                 lab_i16=cfg.lab_i16,
                 frontier_size=cfg.frontier_size,
                 telemetry_rounds=cfg.telemetry_rounds,
+                telemetry_per_rank=cfg.telemetry_per_rank,
             )
             fn = make_dist_steiner(
                 mesh, dcfg, vert_axis=vert_axis, replica_axes=replica_axes
@@ -832,6 +834,7 @@ class Mesh2DBackend(_Backend):
                 res.messages,
                 res.history,
                 cfg.telemetry_rounds,
+                per_rank=res.per_rank,
             ),
         )
 
@@ -866,6 +869,7 @@ class Mesh2DBackend(_Backend):
                 row_axis=row_axis,
                 col_axis=col_axis,
                 telemetry_rounds=cfg.telemetry_rounds,
+                telemetry_per_rank=cfg.telemetry_per_rank,
             )
             _bump("mesh2d")
             if executables is not None:

@@ -89,6 +89,14 @@ class SolverConfig:
         the last slot (aggregate counters stay exact).  0 disables the
         buffer entirely.  H is baked into the executable, so toggling
         the host-side obs recorder never retraces or changes trees.
+      telemetry_per_rank: static flag (mesh backends only) — additionally
+        carry a (H+1, n_ranks, 4) per-rank flight-recorder buffer whose
+        per-round rank rows sum exactly to the global channels (ghost
+        padding corrected per block), surfaced as
+        ``SolveOutput.telemetry.per_rank`` and analyzed by
+        :mod:`repro.obs.flight`.  Swaps an ``all_gather`` in for the
+        ``psum`` only on the per-rank path; disabled (default) the buffer
+        has zero rank slots and the executable is unchanged.
     """
 
     backend: str = "single"
@@ -115,6 +123,8 @@ class SolverConfig:
     lab_i16: bool = False
     # per-round telemetry buffer depth (0 disables)
     telemetry_rounds: int = 256
+    # per-rank flight recorder (mesh1d/mesh2d; needs telemetry_rounds >= 1)
+    telemetry_per_rank: bool = False
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -150,6 +160,18 @@ class SolverConfig:
                 f"telemetry_rounds must be an int >= 0, "
                 f"got {self.telemetry_rounds!r}"
             )
+        if self.telemetry_per_rank:
+            if self.backend not in ("mesh1d", "mesh2d"):
+                raise ValueError(
+                    f"telemetry_per_rank records one row per mesh device "
+                    f"and requires backend 'mesh1d' or 'mesh2d'; "
+                    f"got backend={self.backend!r}"
+                )
+            if self.telemetry_rounds < 1:
+                raise ValueError(
+                    "telemetry_per_rank requires telemetry_rounds >= 1 "
+                    "(the per-rank flight recorder rides the round buffer)"
+                )
         if self.src_block is not None and not (
             isinstance(self.src_block, int) and self.src_block >= 1
         ):

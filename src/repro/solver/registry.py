@@ -49,31 +49,44 @@ class SolveTelemetry:
         config.telemetry_rounds); None when telemetry_rounds=0.
         Batch solves sum the buffer across lanes (converged lanes stop
         writing, so short lanes contribute zero rows).
+      per_rank: (R, n_ranks, 4) f32 flight-recorder buffer — one channel
+        row per mesh device per round, trimmed like ``per_round``; rank
+        rows sum exactly to the global channels (integer f32 counts,
+        ghost padding corrected per block).  None unless the solve ran
+        with ``SolverConfig.telemetry_per_rank=True`` (mesh backends).
     """
 
     iterations: int
     relaxations: int
     messages: int
     per_round: Optional[np.ndarray] = None
+    per_rank: Optional[np.ndarray] = None
 
 
 def telemetry_from_counts(
-    iterations, relaxations, messages, history, telemetry_rounds: int
+    iterations, relaxations, messages, history, telemetry_rounds: int,
+    per_rank=None,
 ) -> SolveTelemetry:
     """Builds a :class:`SolveTelemetry` from loop-carried counters.
 
     ``history`` is the raw (H+1, 4) device buffer (or None); the spill
     slot and rows beyond the round count are trimmed here, on the host.
+    ``per_rank`` is the raw (H+1, n_ranks, 4) flight-recorder buffer (or
+    None), trimmed identically.
     """
     iters = int(iterations)
     per_round = None
     if history is not None and telemetry_rounds > 0:
         per_round = np.asarray(history)[: min(iters, telemetry_rounds)]
+    rank_rows = None
+    if per_rank is not None and telemetry_rounds > 0:
+        rank_rows = np.asarray(per_rank)[: min(iters, telemetry_rounds)]
     return SolveTelemetry(
         iterations=iters,
         relaxations=int(round(float(relaxations))),
         messages=int(round(float(messages))),
         per_round=per_round,
+        per_rank=rank_rows,
     )
 
 

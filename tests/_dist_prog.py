@@ -124,6 +124,64 @@ def main() -> None:
     assert rp.raw.edge_set() == base.raw.edge_set()
     print("OK mesh-frontier trace-once + inert dup-seed padding")
 
+    # per-rank flight recorder on real 2×4 meshes (paper §VI measurement
+    # granularity): the (rounds, 8, 4) buffer must sum bit-exactly to the
+    # global channels, and enabling it must change nothing else — same
+    # tree, same counters, no extra retraces
+    from repro.obs import flight
+
+    for backend, mode, mkcfg in (
+        (
+            "mesh1d", "frontier",
+            lambda pr: SolverConfig(
+                backend="mesh1d", mode="frontier", mesh_shape=(2, 4),
+                ell_width=8, frontier_size=16, telemetry_per_rank=pr,
+            ),
+        ),
+        (
+            "mesh2d", "bucket",
+            lambda pr: SolverConfig(
+                backend="mesh2d", mode="bucket", mesh_shape=(2, 4),
+                telemetry_per_rank=pr,
+            ),
+        ),
+    ):
+        base_out = SteinerSolver(mkcfg(False)).prepare(g).solve(sd)
+        assert base_out.telemetry.per_rank is None
+        c0 = trace_count(backend)
+        h = SteinerSolver(mkcfg(True)).prepare(g)
+        pr_out = h.solve(sd)
+        pr_out2 = h.solve(np.roll(sd, 1))
+        assert trace_count(backend) == c0 + 1, "per-rank solve re-traced"
+        t = pr_out.telemetry
+        assert t.per_rank is not None and t.per_rank.shape[1] == 8, (
+            t.per_rank.shape
+        )
+        assert t.per_rank.shape[0] == t.per_round.shape[0]
+        # bit-exact attribution: rank rows sum to the global channels
+        flight.check_consistency(
+            t.per_rank, t.per_round, label=f"{backend}/{mode}"
+        )
+        flight.check_consistency(
+            pr_out2.telemetry.per_rank, pr_out2.telemetry.per_round,
+            label=f"{backend}/{mode} q2",
+        )
+        # the knob is observability-only: identical tree and counters
+        assert pr_out.raw.edge_set() == base_out.raw.edge_set()
+        assert pr_out.total_distance == base_out.total_distance
+        assert t.messages == base_out.telemetry.messages
+        assert t.relaxations == base_out.telemetry.relaxations
+        assert t.iterations == base_out.telemetry.iterations
+        np.testing.assert_array_equal(t.per_round, base_out.telemetry.per_round)
+        rep = flight.analyze(t.per_rank, label=f"{backend}/{mode}")
+        assert rep.n_ranks == 8 and rep.rounds == t.per_round.shape[0]
+        assert np.all(rep.imbalance >= 1.0 - 1e-12)
+        print(
+            f"OK per-rank 2x4 {backend}/{mode}: rounds={rep.rounds} "
+            f"msg_skew={rep.message_skew:.2f} "
+            f"straggler={rep.stragglers[0] if rep.stragglers else None}"
+        )
+
 
 if __name__ == "__main__":
     main()

@@ -25,7 +25,9 @@ from repro.core import from_edges
 from repro.obs import (
     MetricsRegistry,
     Tracer,
+    flight,
     parse_prometheus,
+    regress,
     validate_chrome_trace,
 )
 from repro.obs.__main__ import main as obs_main
@@ -464,3 +466,390 @@ def test_obs_cli_validate(tmp_path):
     assert obs_main(["validate", str(bad)]) == 1
     metrics.write_text("not { prometheus\n")
     assert obs_main(["validate", str(trace), "--metrics", str(metrics)]) == 1
+
+
+# ----------------------------------------------------------------------------
+# exposition-format conformance — pathological label values round-trip
+# ----------------------------------------------------------------------------
+
+
+def test_prometheus_label_escaping_roundtrip():
+    reg = MetricsRegistry()
+    weird = 'a\\b"c\nd,}e'
+    reg.counter(
+        "w_total", "line one\nline two \\ backslash", {"path": weird}
+    ).inc(3)
+    reg.gauge("g", "plain", {"x": "comma,brace}"}).set(7)
+    text = reg.prometheus_text()
+    # HELP newline must be escaped or the dump is not line-parseable
+    [help_w] = [ln for ln in text.split("\n") if ln.startswith("# HELP w_total")]
+    assert "\\n" in help_w
+    samples = parse_prometheus(text)
+    [wkey] = [k for k in samples if k.startswith("w_total")]
+    assert samples[wkey] == 3.0
+    assert samples['g{x="comma,brace}"}'] == 7.0
+    # canonical keys are stable under re-parsing
+    assert parse_prometheus(text) == samples
+
+
+# ----------------------------------------------------------------------------
+# tracer hygiene — leaked-span flush + atomic export
+# ----------------------------------------------------------------------------
+
+
+def test_flush_open_spans_records_leaked():
+    tr = Tracer()
+    cm = tr.span("abandoned")
+    cm.__enter__()
+    assert tr.flush_open_spans() == ["abandoned"]
+    evs = [e for e in tr.events() if e["name"] == "abandoned"]
+    assert evs and evs[0]["args"]["leaked"] is True
+    assert tr.flush_open_spans() == []  # idempotent
+
+
+def test_tracer_atexit_flushes_leaked_spans():
+    code = (
+        "from repro.obs.trace import Tracer\n"
+        "tr = Tracer()\n"
+        "cm = tr.span('leaky_span')\n"
+        "cm.__enter__()\n"
+    )
+    env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+    p = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env
+    )
+    assert p.returncode == 0, p.stderr
+    assert "flushed 1 span(s)" in p.stderr and "leaky_span" in p.stderr
+
+
+def test_export_chrome_atomic(tmp_path):
+    tr = Tracer()
+    with tr.span("s"):
+        pass
+    path = tmp_path / "t.json"
+    tr.export_chrome(str(path))
+    assert validate_chrome_trace(json.loads(path.read_text())) > 0
+    # no temp litter: the write went through tmp + os.replace
+    assert list(tmp_path.glob("*.tmp.*")) == []
+
+
+# ----------------------------------------------------------------------------
+# serve gauges — pad_waste and queue depth on the scrape endpoint
+# ----------------------------------------------------------------------------
+
+
+def test_serve_pad_waste_and_queue_depth_gauges():
+    from repro.serve import ServeConfig, SteinerServer
+
+    g, n, _ = _instance(0)
+    srv = SteinerServer(
+        g, ServeConfig(buckets=(8,), max_batch=4, cache_capacity=16)
+    )
+    rng = np.random.default_rng(2)
+    srv.submit(rng.choice(n, size=4, replace=False).tolist())
+    s = parse_prometheus(srv.prometheus_text())
+    assert s["serve_queue_depth"] == 1.0
+    srv.flush()
+    st = srv.stats()
+    s = parse_prometheus(srv.prometheus_text())
+    assert s["serve_queue_depth"] == 0.0
+    # 1 real lane in a 4-lane batch → 3/4 padding; gauge == stats() value
+    assert st["pad_waste"] == 0.75
+    assert s["serve_pad_waste"] == pytest.approx(st["pad_waste"])
+
+
+# ----------------------------------------------------------------------------
+# per-rank flight recorder — (1,1) mesh unit coverage (the 2×4 forced-host
+# assertions live in tests/_dist_prog.py)
+# ----------------------------------------------------------------------------
+
+
+def test_per_rank_config_validation():
+    with pytest.raises(ValueError, match="telemetry_per_rank"):
+        SolverConfig(backend="single", telemetry_per_rank=True)
+    with pytest.raises(ValueError, match="telemetry_per_rank"):
+        SolverConfig(
+            backend="mesh1d", telemetry_per_rank=True, telemetry_rounds=0
+        )
+
+
+@pytest.mark.parametrize(
+    "backend,mode",
+    [
+        ("mesh1d", "dense"),
+        ("mesh1d", "bucket"),
+        ("mesh1d", "frontier"),
+        ("mesh2d", "dense"),
+        ("mesh2d", "bucket"),
+    ],
+)
+def test_per_rank_flight_recorder_single_device(backend, mode):
+    g, n, seeds = _instance(2)
+    kw = dict(ell_width=8, frontier_size=32) if mode == "frontier" else {}
+    base = (
+        SteinerSolver(
+            SolverConfig(backend=backend, mode=mode, mesh_shape=(1, 1), **kw)
+        )
+        .prepare(g)
+        .solve(seeds)
+    )
+    assert base.telemetry.per_rank is None
+    out = (
+        SteinerSolver(
+            SolverConfig(
+                backend=backend, mode=mode, mesh_shape=(1, 1),
+                telemetry_per_rank=True, **kw,
+            )
+        )
+        .prepare(g)
+        .solve(seeds)
+    )
+    pr = out.telemetry.per_rank
+    assert pr is not None
+    assert pr.shape == (base.telemetry.per_round.shape[0], 1, 4)
+    flight.check_consistency(pr, out.telemetry.per_round)
+    # the knob is observability-only
+    np.testing.assert_array_equal(
+        out.telemetry.per_round, base.telemetry.per_round
+    )
+    assert out.total_distance == base.total_distance
+    assert out.telemetry.messages == base.telemetry.messages
+
+
+def test_per_rank_emits_rank_counter_tracks(tmp_path):
+    g, n, seeds = _instance(1)
+    obs.enable()
+    out = (
+        SteinerSolver(
+            SolverConfig(
+                backend="mesh1d", mode="frontier", mesh_shape=(1, 1),
+                ell_width=8, frontier_size=32, telemetry_per_rank=True,
+            )
+        )
+        .prepare(g)
+        .solve(seeds)
+    )
+    assert out.telemetry.per_rank is not None
+    path = tmp_path / "trace.json"
+    assert obs.export_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    assert validate_chrome_trace(doc) > 0
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "rank[mesh1d/frontier/0]" in names
+    tracks = [
+        e for e in doc["traceEvents"]
+        if e["name"] == "rank[mesh1d/frontier/0]"
+    ]
+    assert len(tracks) == out.telemetry.per_rank.shape[0]
+    assert set(tracks[0]["args"]) == set(obs.ROUND_CHANNELS)
+
+
+# ----------------------------------------------------------------------------
+# flight.py analytics
+# ----------------------------------------------------------------------------
+
+
+def test_flight_imbalance_and_stragglers():
+    per_rank = np.zeros((3, 4, 4), np.float32)
+    per_rank[0, :, MSG] = [4, 0, 0, 0]  # one rank does everything
+    per_rank[1, :, MSG] = [1, 1, 1, 1]  # perfectly balanced
+    # round 2: no activity at all → imbalance 1.0 by definition
+    imb = flight.load_imbalance(per_rank)
+    assert imb[0, MSG] == 4.0
+    assert imb[1, MSG] == 1.0
+    assert imb[2, MSG] == 1.0
+    strag = flight.straggler_ranks(per_rank)
+    # rank 0 carried the max in both active rounds; ties count everyone
+    assert strag[0] == (0, 2)
+    assert dict(strag) == {0: 2, 1: 1, 2: 1, 3: 1}
+    rep = flight.analyze(per_rank, label="unit")
+    assert rep.n_ranks == 4 and rep.rounds == 3
+    assert rep.global_totals[MSG] == 8.0
+    assert rep.peak_imbalance[MSG] == 4.0
+    # mean over ACTIVE rounds only: (4.0 + 1.0) / 2
+    assert rep.mean_imbalance[MSG] == pytest.approx(2.5)
+    assert rep.message_skew == pytest.approx(5.0 / 2.0)
+
+
+def test_flight_consistency_check():
+    per_rank = np.arange(2 * 3 * 4, dtype=np.float32).reshape(2, 3, 4)
+    per_round = per_rank.sum(axis=1)
+    flight.check_consistency(per_rank, per_round)  # exact → no raise
+    bad = per_round.copy()
+    bad[1, MSG] += 1.0
+    with pytest.raises(ValueError, match="round 1"):
+        flight.check_consistency(per_rank, bad, label="unit")
+    with pytest.raises(ValueError, match="per_rank must be"):
+        flight.analyze(np.zeros((2, 3)))
+
+
+def test_flight_dump_load_render(tmp_path):
+    per_rank = np.ones((2, 2, 4), np.float32)
+    per_rank[1, 0, MSG] = 5.0
+    path = tmp_path / "flight.json"
+    flight.dump_flight(
+        str(path), per_rank, label="t", per_round=per_rank.sum(axis=1),
+        extra={"graph": "unit"},
+    )
+    doc = flight.load_flight(str(path))
+    np.testing.assert_array_equal(doc["per_rank"], per_rank)
+    assert doc["extra"] == {"graph": "unit"}
+    rep = flight.analyze(doc["per_rank"], label=doc["label"])
+    txt = flight.render_report(rep)
+    assert "Flight report: t" in txt and "messages" in txt
+    md = flight.render_report(rep, fmt="markdown")
+    assert "| channel |" in md
+    with pytest.raises(ValueError, match="fmt"):
+        flight.render_report(rep, fmt="html")
+    notflight = tmp_path / "x.json"
+    notflight.write_text("{}")
+    with pytest.raises(ValueError, match="not a flight file"):
+        flight.load_flight(str(notflight))
+
+
+def test_obs_cli_report(tmp_path, capsys):
+    per_rank = np.ones((2, 2, 4), np.float32)
+    path = tmp_path / "flight.json"
+    flight.dump_flight(
+        str(path), per_rank, label="t", per_round=per_rank.sum(axis=1)
+    )
+    assert obs_main(["report", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "Flight report: t" in out and "message_skew" in out
+    assert obs_main(["report", str(path), "--markdown"]) == 0
+    assert "| channel |" in capsys.readouterr().out
+    # a flight whose rank rows do NOT sum to the globals must fail
+    flight.dump_flight(
+        str(path), per_rank, label="t", per_round=per_rank.sum(axis=1) + 1
+    )
+    assert obs_main(["report", str(path)]) == 1
+
+
+# ----------------------------------------------------------------------------
+# regress.py — the perf gate itself
+# ----------------------------------------------------------------------------
+
+
+def _lo(value, metric="m_lo", mad_samples=None):
+    samples = (value,) if mad_samples is None else tuple(mad_samples)
+    return regress.MetricResult(metric, "ms", False, samples)
+
+
+def _hi(value):
+    return regress.MetricResult("m_hi", "qps", True, (value,))
+
+
+def test_regress_compare_thresholds():
+    base = {
+        "m_lo": {"value": 100.0, "mad": 2.0},
+        "m_hi": {"value": 50.0, "mad": 1.0},
+    }
+    # unknown metrics use the default 1.8 ratio:
+    # lower-better limit = max(100·1.8, 100 + 5·2) = 180
+    assert regress.compare([_lo(179.0)], base)[0].status == "ok"
+    assert regress.compare([_lo(181.0)], base)[0].status == "regress"
+    # MAD widens a tight ratio (noise awareness): slack 5·4 = 20 lifts
+    # the 1.1-ratio limit from 110 to 120
+    noisy = {"m_lo": {"value": 100.0, "mad": 4.0}}
+    assert regress.compare([_lo(115.0)], noisy, max_ratio=1.1)[0].status == "ok"
+    assert (
+        regress.compare([_lo(125.0)], noisy, max_ratio=1.1)[0].status
+        == "regress"
+    )
+    # ...but the slack is capped at 0.4·baseline: a hugely noisy
+    # baseline cannot hide a genuine big regression
+    wild = {"m_lo": {"value": 100.0, "mad": 1000.0}}
+    assert regress.compare([_lo(141.0)], wild, max_ratio=1.1)[0].status == (
+        "regress"
+    )
+    # higher-better mirror: limit = min(50/1.8, 50 − 5·1) = 27.78
+    assert regress.compare([_hi(28.0)], base)[0].status == "ok"
+    assert regress.compare([_hi(27.0)], base)[0].status == "regress"
+    # missing baseline is reported, never a crash
+    v = regress.compare(
+        [regress.MetricResult("unknown", "ms", False, (1.0,))], base
+    )[0]
+    assert v.status == "missing" and v.baseline is None
+    # render covers every verdict shape
+    text = regress.render_verdicts(
+        regress.compare([_lo(1.0), _hi(1.0)], base)
+    )
+    assert "m_lo" in text and "m_hi" in text
+
+
+def test_regress_median_and_mad():
+    r = _lo(0.0, mad_samples=(10.0, 11.0, 14.0))
+    assert r.value == 11.0
+    assert r.mad == 1.0  # median(|{10,11,14} − 11|) = median{1,0,3}
+
+
+def test_regress_injection_is_time_derived_only(monkeypatch):
+    res = [
+        regress.MetricResult("t", "ms", False, (10.0,), time_derived=True),
+        regress.MetricResult("q", "qps", True, (100.0,), time_derived=True),
+        regress.MetricResult(
+            "w", "messages", False, (500.0,), time_derived=False
+        ),
+    ]
+    out = {r.metric: r for r in regress.apply_injection(res, 2.0)}
+    assert out["t"].value == 20.0  # latency doubles
+    assert out["q"].value == 50.0  # throughput halves
+    assert out["w"].value == 500.0  # deterministic work untouched
+    assert regress.apply_injection(res, 1.0) == res
+    monkeypatch.setenv(regress.INJECT_ENV, "2.5")
+    assert regress.injection_factor() == 2.5
+    monkeypatch.setenv(regress.INJECT_ENV, "-1")
+    with pytest.raises(ValueError):
+        regress.injection_factor()
+
+
+def test_regress_history_and_baseline_files(tmp_path):
+    res = [_lo(10.0), _hi(100.0)]
+    hist = tmp_path / "h.jsonl"
+    assert regress.append_history(hist, res, quick=True, k=1) == 2
+    assert regress.append_history(hist, res, quick=True, k=1) == 2
+    rows = regress.load_history(hist)
+    assert len(rows) == 4  # append-only
+    assert rows[0]["metric"] == "m_lo" and rows[0]["value"] == 10.0
+    assert "platform" in rows[0]["env"]
+    base = tmp_path / "b.json"
+    regress.write_baseline(base, res)
+    bl = regress.load_baseline(base)
+    assert bl["m_lo"]["value"] == 10.0
+    assert bl["m_hi"]["higher_is_better"] is True
+    assert list(tmp_path.glob("*.tmp.*")) == []  # atomic baseline write
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    with pytest.raises(ValueError, match="not a baseline"):
+        regress.load_baseline(bad)
+
+
+def test_bench_cli_gate(tmp_path, monkeypatch):
+    def fake(k, quick):
+        return [
+            regress.MetricResult(
+                "steiner_warm_ms_bucket", "ms", False, (10.0,) * k
+            )
+        ]
+
+    monkeypatch.setattr(regress, "GROUPS", {"fake": fake})
+    hist, base = tmp_path / "h.jsonl", tmp_path / "b.json"
+    args = [
+        "bench", "--only", "fake", "--k", "3",
+        "--history", str(hist), "--baseline", str(base),
+    ]
+    # no baseline yet: warn-and-pass, unless --strict
+    assert obs_main(args) == 0
+    assert obs_main(args + ["--strict"]) == 1
+    assert obs_main(args + ["--update-baseline"]) == 0
+    assert regress.load_baseline(base)["steiner_warm_ms_bucket"]["value"] == 10.0
+    # clean pass against its own baseline
+    assert obs_main(args) == 0
+    # unknown group is an error, not a silent no-op
+    assert obs_main(["bench", "--only", "nope", "--history", str(hist),
+                     "--baseline", str(base)]) == 1
+    # injected 2× slowdown must fire the gate (policy ratio 1.8, mad 0)
+    monkeypatch.setenv(regress.INJECT_ENV, "2.0")
+    assert obs_main(args) == 1
+    rows = regress.load_history(hist)
+    assert len(rows) == 5 and rows[-1]["injected"] == 2.0
