@@ -1,0 +1,33 @@
+"""repro.analysis — the jitlint trace-safety analyzer + runtime sanitizer.
+
+Static side (no jax import, pure ``ast``): infer which functions run
+under a JAX trace (:mod:`repro.analysis.regions`), then check the rule
+set TS01–TS07 targeting this repo's documented bug classes
+(:mod:`repro.analysis.rules`).  CLI: ``python -m repro.analysis`` —
+ruff-style ``file:line:col: TSxx message`` output gated by a committed
+baseline (:mod:`repro.analysis.baseline`).
+
+Runtime side (:mod:`repro.analysis.sanitize`): a context manager that
+arms ``jax.transfer_guard("disallow")`` and a retrace-count guard around
+warm-path solves — the dynamic complement that catches what static
+analysis can't see.
+
+Suppress a single line with ``# jitlint: ignore``.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Finding, sort_findings
+from repro.analysis.regions import Project
+from repro.analysis.rules import check_project
+
+__all__ = ["Finding", "Project", "analyze_paths", "check_project"]
+
+
+def analyze_paths(paths) -> List[Finding]:
+    """Index ``paths`` (files or directories), infer jit regions, and run
+    every rule.  Returns findings sorted by (path, line, col, rule)."""
+    project = Project.load(paths)
+    return sort_findings(check_project(project))

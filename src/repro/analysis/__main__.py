@@ -1,0 +1,126 @@
+"""CLI: ``python -m repro.analysis [paths…] [--baseline FILE]``.
+
+Exit codes:
+  0  no findings outside the baseline
+  1  new findings (or, with ``--strict-expired``, expired baseline debt)
+  2  usage error
+
+Typical runs::
+
+    python -m repro.analysis src/repro
+    python -m repro.analysis src/repro --baseline ANALYSIS_BASELINE.json
+    python -m repro.analysis src/repro --baseline ANALYSIS_BASELINE.json \
+        --update-baseline   # re-pin: current findings become the baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from repro.analysis import analyze_paths
+from repro.analysis import baseline as baseline_mod
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jitlint: trace-safety static analysis (rules TS01-TS07)",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src/repro"],
+        help="files or directories to analyze (default: src/repro)",
+    )
+    ap.add_argument(
+        "--baseline", metavar="FILE",
+        help="committed findings baseline; only NEW findings fail the run",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite --baseline from the current findings and exit 0",
+    )
+    ap.add_argument(
+        "--strict-expired", action="store_true",
+        help="also exit 1 when baseline entries no longer match (fixed debt "
+        "must be removed from the baseline)",
+    )
+    ap.add_argument(
+        "--regions", action="store_true",
+        help="dump the inferred jit regions (traced functions + why) "
+        "instead of running rules",
+    )
+    ap.add_argument(
+        "--quiet", action="store_true", help="suppress the summary line"
+    )
+    args = ap.parse_args(argv)
+
+    if args.update_baseline and not args.baseline:
+        ap.error("--update-baseline requires --baseline FILE")
+
+    if args.regions:
+        from repro.analysis import Project
+
+        project = Project.load(args.paths)
+        for fn in sorted(
+            project.traced_functions(), key=lambda f: (f.module.path, f.qualname)
+        ):
+            statics = sorted(p for p, s in fn.param_static.items() if s)
+            tag = " [root]" if fn.is_root else ""
+            extra = f" static={statics}" if statics else ""
+            print(
+                f"{fn.module.path}:{fn.node.lineno}: {fn.display()}{tag} "
+                f"({fn.trace_reason}){extra}"
+            )
+        return 0
+
+    findings = analyze_paths(args.paths)
+
+    if args.baseline and args.update_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            fh.write(baseline_mod.dump(findings))
+        if not args.quiet:
+            print(
+                f"baseline updated: {len(findings)} finding(s) pinned "
+                f"in {args.baseline}"
+            )
+        return 0
+
+    suppressed_n = 0
+    expired = []
+    if args.baseline:
+        try:
+            with open(args.baseline, "r", encoding="utf-8") as fh:
+                entries = baseline_mod.load(fh.read())
+        except FileNotFoundError:
+            print(f"baseline file not found: {args.baseline}", file=sys.stderr)
+            return 2
+        new, suppressed, expired = baseline_mod.split(findings, entries)
+        suppressed_n = len(suppressed)
+        findings = new
+
+    for f in findings:
+        print(f.render())
+    for e in expired:
+        print(
+            f"{e.get('path', '?')}: expired baseline entry "
+            f"[{e.get('rule', '?')} in {e.get('context', '?')}] — fixed? "
+            f"run --update-baseline to retire it"
+        )
+
+    if not args.quiet:
+        bits = [f"{len(findings)} new finding(s)"]
+        if args.baseline:
+            bits.append(f"{suppressed_n} baselined")
+            bits.append(f"{len(expired)} expired")
+        print("jitlint: " + ", ".join(bits))
+
+    if findings:
+        return 1
+    if expired and args.strict_expired:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

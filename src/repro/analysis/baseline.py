@@ -1,0 +1,85 @@
+"""Committed findings baseline: CI fails only on NEW findings.
+
+``ANALYSIS_BASELINE.json`` pins the accepted findings at adoption time so
+the analyzer can gate CI from day one without a big-bang cleanup.  Keys
+are line-number-free (rule, path, context, normalized line text) — see
+:meth:`repro.analysis.findings.Finding.baseline_key` — so unrelated edits
+don't churn the file.
+
+Lifecycle:
+  * a finding matching a baseline entry is **suppressed** (counted, not
+    reported);
+  * a finding with no entry is **new** → exit 1;
+  * an entry with no finding is **expired** — reported as fixable debt
+    and removed by ``--update-baseline``.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.findings import Finding
+
+_FORMAT = 1
+
+
+def _entry(f: Finding) -> Dict[str, str]:
+    rule, path, context, line_text = f.baseline_key()
+    return {"rule": rule, "path": path, "context": context, "line": line_text}
+
+
+def _key(entry: Dict[str, str]) -> Tuple[str, str, str, str]:
+    return (
+        entry.get("rule", ""),
+        entry.get("path", ""),
+        entry.get("context", ""),
+        entry.get("line", ""),
+    )
+
+
+def dump(findings: Iterable[Finding]) -> str:
+    entries = sorted(
+        ({**_entry(f)} for f in findings),
+        key=lambda e: (e["path"], e["rule"], e["context"], e["line"]),
+    )
+    # dedup identical keys (two findings on one line collapse to one entry)
+    seen, unique = set(), []
+    for e in entries:
+        k = _key(e)
+        if k not in seen:
+            seen.add(k)
+            unique.append(e)
+    return json.dumps({"format": _FORMAT, "findings": unique}, indent=2) + "\n"
+
+
+def load(text: str) -> List[Dict[str, str]]:
+    data = json.loads(text) if text.strip() else {"findings": []}
+    if not isinstance(data, dict) or "findings" not in data:
+        raise ValueError("baseline must be {'format': 1, 'findings': [...]}")
+    return list(data["findings"])
+
+
+def split(
+    findings: List[Finding], entries: List[Dict[str, str]]
+) -> Tuple[List[Finding], List[Finding], List[Dict[str, str]]]:
+    """(new, suppressed, expired_entries) for one run against a baseline.
+
+    Matching is multiset-aware: N identical keys in the baseline absorb at
+    most N identical findings."""
+    budget: Dict[Tuple[str, str, str, str], int] = {}
+    for e in entries:
+        budget[_key(e)] = budget.get(_key(e), 0) + 1
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in findings:
+        k = f.baseline_key()
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+            suppressed.append(f)
+        else:
+            new.append(f)
+    expired = [e for e in entries if budget.get(_key(e), 0) > 0]
+    for e in expired:
+        budget[_key(e)] -= 1
+    return new, suppressed, expired

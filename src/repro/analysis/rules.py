@@ -1,0 +1,562 @@
+"""The trace-safety rules (TS01–TS07) and the expression staticness oracle.
+
+Rule ids are stable API — they appear in findings output, in
+``ANALYSIS_BASELINE.json``, and in ``# jitlint: ignore`` comments:
+
+  TS01  ``assert`` on a traced value (never fires under jit)
+  TS02  Python branch / ``isinstance`` / ``bool()`` on a maybe-traced value
+  TS03  host sync inside a traced region (``float()`` / ``int()`` /
+        ``.item()`` / ``np.asarray`` on a traced value)
+  TS04  ``id()``-keyed identity (ids are reused after gc — the PR-7 cache
+        aliasing bug class); applies host-side too
+  TS05  array construction from unordered ``set``/``frozenset`` iteration
+        (nondeterministic layout); applies host-side too
+  TS06  static-knob drift at a jit declaration: a parameter classified
+        static in :mod:`repro.knobs` missing from a literal
+        ``static_argnames`` tuple (silent retrace-per-value, or a baked
+        Python branch), a declared name that is not a parameter, or a
+        declared name classified as a traced operand
+  TS07  telemetry / obs call inside a traced region not gated by a
+        static knob (breaks the zero-cost-when-disabled invariant)
+
+Staticness (:func:`is_static`) is deliberately two-sided: optimistic for
+host values (closure variables, module globals, shape attributes) so the
+kernels' shape asserts and ``pair_chunks``-style unrolled Python loops
+stay quiet, pessimistic for anything that could be a tracer (positional
+params without a static declaration, ``jnp.*`` results, unknown calls).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.regions import (
+    STATIC_ATTRS,
+    _STATIC_BUILTINS,
+    _dotted,
+    _last_segment,
+    FunctionInfo,
+    ModuleInfo,
+    Project,
+)
+
+SUPPRESS_MARKER = "jitlint: ignore"
+
+# numpy-call results are host values (static) but calling them on a
+# traced operand is a host sync (TS03)
+_HOST_CALL_PREFIXES = ("numpy.", "math.")
+_TRACED_CALL_PREFIXES = ("jax.", "jnp.", "flax.", "optax.")
+# method names that force a device->host sync on an array
+_SYNC_METHODS = frozenset(
+    {"item", "tolist", "block_until_ready", "__array__"}
+)
+_SYNC_CALLS = frozenset({"float", "int", "complex"})
+
+
+# ---------------------------------------------------------------------------
+# staticness oracle
+# ---------------------------------------------------------------------------
+
+
+def _env_for(project: Project, fn: FunctionInfo) -> Dict[str, bool]:
+    """Name -> staticness for one traced function's own scope.
+
+    Parameters come from the resolved ``param_static``; locals are folded
+    in statement order with an AND-join on rebinding (two passes so
+    forward references stabilize).  Nested function bodies are skipped —
+    they have their own env."""
+    cache = getattr(project, "_env_cache", None)
+    if cache is None:
+        cache = project._env_cache = {}
+    hit = cache.get(fn)
+    if hit is not None:
+        return hit
+    env: Dict[str, bool] = dict(fn.param_static)
+    cache[fn] = env  # pre-seed so recursive lookups terminate
+
+    def bind(target: ast.AST, static: bool) -> None:
+        if isinstance(target, ast.Name):
+            prev = env.get(target.id)
+            env[target.id] = static if prev is None else (prev and static)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                bind(elt, static)
+        elif isinstance(target, ast.Starred):
+            bind(target.value, static)
+        # attribute / subscript targets don't bind names
+
+    def fold(stmts) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                env.setdefault(stmt.name, True)  # a host function object
+                continue
+            if isinstance(stmt, ast.Assign):
+                if (
+                    isinstance(stmt.value, ast.Tuple)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Tuple)
+                    and len(stmt.targets[0].elts) == len(stmt.value.elts)
+                ):
+                    for tgt, val in zip(stmt.targets[0].elts, stmt.value.elts):
+                        bind(tgt, is_static(val, project, fn))
+                else:
+                    static = is_static(stmt.value, project, fn)
+                    for tgt in stmt.targets:
+                        bind(tgt, static)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                bind(stmt.target, is_static(stmt.value, project, fn))
+            elif isinstance(stmt, ast.AugAssign):
+                bind(stmt.target, is_static(stmt.value, project, fn))
+            elif isinstance(stmt, ast.For):
+                bind(stmt.target, is_static(stmt.iter, project, fn))
+                fold(stmt.body)
+                fold(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                fold(stmt.body)
+                fold(stmt.orelse)
+            elif isinstance(stmt, ast.If):
+                fold(stmt.body)
+                fold(stmt.orelse)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    if item.optional_vars is not None:
+                        bind(
+                            item.optional_vars,
+                            is_static(item.context_expr, project, fn),
+                        )
+                fold(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                fold(stmt.body)
+                for h in stmt.handlers:
+                    fold(h.body)
+                fold(stmt.orelse)
+                fold(stmt.finalbody)
+            elif isinstance(stmt, ast.Expr) and isinstance(
+                stmt.value, ast.NamedExpr
+            ):
+                bind(stmt.value.target, is_static(stmt.value.value, project, fn))
+
+    fold(fn.node.body)
+    fold(fn.node.body)  # second pass: forward refs, loop-carried rebinds
+    return env
+
+
+def _lookup(project: Project, fn: Optional[FunctionInfo], name: str) -> bool:
+    """Staticness of a free name seen from ``fn`` (True = static)."""
+    s = fn
+    while s is not None:
+        if not s.traced:
+            # a closure variable from host scope is a concrete Python
+            # value at trace time
+            return True
+        env = _env_for(project, s)
+        if name in env:
+            return env[name]
+        s = s.parent
+    return True  # module global / import / builtin
+
+
+def is_static(
+    expr: ast.AST,
+    project: Project,
+    fn: Optional[FunctionInfo],
+    overlay: Optional[Dict[str, bool]] = None,
+) -> bool:
+    """True iff ``expr`` is a compile-time value inside ``fn``'s trace."""
+
+    def ev(e: ast.AST) -> bool:
+        if isinstance(e, ast.Constant):
+            return True
+        if isinstance(e, ast.Name):
+            if overlay is not None and e.id in overlay:
+                return overlay[e.id]
+            return _lookup(project, fn, e.id)
+        if isinstance(e, ast.Attribute):
+            if ev(e.value):
+                return True
+            return e.attr in STATIC_ATTRS
+        if isinstance(e, ast.Subscript):
+            return ev(e.value) and ev(e.slice)
+        if isinstance(e, ast.Slice):
+            return all(
+                part is None or ev(part)
+                for part in (e.lower, e.upper, e.step)
+            )
+        if isinstance(e, ast.BinOp):
+            return ev(e.left) and ev(e.right)
+        if isinstance(e, ast.BoolOp):
+            return all(ev(v) for v in e.values)
+        if isinstance(e, ast.UnaryOp):
+            return ev(e.operand)
+        if isinstance(e, ast.Compare):
+            # `x is None` / `x is not None` is static regardless of x:
+            # tracers are never None
+            if (
+                len(e.ops) == 1
+                and isinstance(e.ops[0], (ast.Is, ast.IsNot))
+                and isinstance(e.comparators[0], ast.Constant)
+                and e.comparators[0].value is None
+            ):
+                return True
+            # `"key" in pytree` is membership in static dict *structure*
+            # (a string can never be a tracer)
+            if (
+                len(e.ops) == 1
+                and isinstance(e.ops[0], (ast.In, ast.NotIn))
+                and isinstance(e.left, ast.Constant)
+                and isinstance(e.left.value, str)
+            ):
+                return True
+            return ev(e.left) and all(ev(c) for c in e.comparators)
+        if isinstance(e, ast.IfExp):
+            return ev(e.test) and ev(e.body) and ev(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return all(ev(v) for v in e.elts)
+        if isinstance(e, ast.Dict):
+            return all(k is None or ev(k) for k in e.keys) and all(
+                ev(v) for v in e.values
+            )
+        if isinstance(e, ast.Starred):
+            return ev(e.value)
+        if isinstance(e, ast.Lambda):
+            return True  # a host function object
+        if isinstance(e, ast.JoinedStr):
+            return all(ev(v) for v in e.values)
+        if isinstance(e, ast.FormattedValue):
+            return ev(e.value)
+        if isinstance(e, ast.NamedExpr):
+            return ev(e.value)
+        if isinstance(
+            e, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)
+        ):
+            inner = dict(overlay or {})
+            for gen in e.generators:
+                it_static = is_static(gen.iter, project, fn, inner)
+                for t in ast.walk(gen.target):
+                    if isinstance(t, ast.Name):
+                        inner[t.id] = it_static
+                if not all(
+                    is_static(c, project, fn, inner) for c in gen.ifs
+                ):
+                    return False
+            if isinstance(e, ast.DictComp):
+                return is_static(e.key, project, fn, inner) and is_static(
+                    e.value, project, fn, inner
+                )
+            return is_static(e.elt, project, fn, inner)
+        if isinstance(e, ast.Call):
+            return _call_static(e)
+        return False
+
+    def _call_static(call: ast.Call) -> bool:
+        args_static = all(ev(a) for a in call.args) and all(
+            ev(k.value) for k in call.keywords
+        )
+        func = call.func
+        if isinstance(func, ast.Name):
+            if func.id in _STATIC_BUILTINS and _lookup(
+                project, fn, func.id
+            ):
+                return args_static
+            return False
+        if isinstance(func, ast.Attribute):
+            mod = fn.module if fn is not None else None
+            dotted = mod.resolve_dotted(func) if mod is not None else None
+            if dotted is not None:
+                if dotted.startswith(_TRACED_CALL_PREFIXES):
+                    return False
+                if dotted.startswith(_HOST_CALL_PREFIXES):
+                    return args_static
+            # a method on a static host object yields a host value
+            if ev(func.value) and func.attr not in ("at",):
+                return args_static
+        return False
+
+    return ev(expr)
+
+
+# ---------------------------------------------------------------------------
+# rule checks
+# ---------------------------------------------------------------------------
+
+
+class _Collector:
+    def __init__(self, project: Project) -> None:
+        self.project = project
+        self.findings: List[Finding] = []
+        self._seen = set()
+
+    def add(
+        self,
+        rule: str,
+        mod: ModuleInfo,
+        node: ast.AST,
+        message: str,
+        context: str,
+    ) -> None:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        key = (rule, mod.path, line, col)
+        if key in self._seen:
+            return
+        text = mod.line_text(line)
+        if SUPPRESS_MARKER in text:
+            return
+        self._seen.add(key)
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=mod.path,
+                line=line,
+                col=col,
+                message=message,
+                context=context,
+                line_text=text,
+            )
+        )
+
+
+def _is_obs_call(call: ast.Call, mod: ModuleInfo) -> bool:
+    dotted = mod.resolve_dotted(call.func)
+    if dotted is None:
+        return False
+    return dotted.startswith("repro.obs")
+
+
+def _check_traced_function(fn: FunctionInfo, out: _Collector) -> None:
+    project, mod = out.project, fn.module
+    ctx = fn.display()
+
+    def static(e: ast.AST) -> bool:
+        return is_static(e, project, fn)
+
+    def visit(node: ast.AST, guarded: bool) -> None:
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            return  # separate traced functions / opaque bodies
+        if isinstance(node, ast.Assert):
+            if not static(node.test):
+                out.add(
+                    "TS01", mod, node,
+                    "assert on a traced value never fires under jit — "
+                    "validate on the host path or use checkify",
+                    ctx,
+                )
+            return  # don't re-flag the test expression as TS02/TS03
+        if isinstance(node, (ast.If, ast.While)):
+            test_static = static(node.test)
+            if not test_static:
+                kind = "while" if isinstance(node, ast.While) else "if"
+                out.add(
+                    "TS02", mod, node,
+                    f"Python `{kind}` on a maybe-traced value is baked "
+                    "in at trace time — use lax.cond/jnp.where or make "
+                    "the operand static",
+                    ctx,
+                )
+            visit(node.test, guarded)
+            for stmt in node.body + node.orelse:
+                visit(stmt, guarded or test_static)
+            return
+        if isinstance(node, ast.IfExp) and not static(node.test):
+            out.add(
+                "TS02", mod, node,
+                "conditional expression on a maybe-traced test is baked "
+                "in at trace time — use jnp.where/lax.cond",
+                ctx,
+            )
+        if isinstance(node, ast.Call):
+            _check_call(node, guarded)
+        for child in ast.iter_child_nodes(node):
+            visit(child, guarded)
+
+    def _check_call(call: ast.Call, guarded: bool) -> None:
+        func = call.func
+        name = func.id if isinstance(func, ast.Name) else None
+        if name == "isinstance" and call.args and not static(call.args[0]):
+            out.add(
+                "TS02", mod, call,
+                "isinstance on a maybe-traced value matches the tracer "
+                "type, not the payload — branch on a static knob instead",
+                ctx,
+            )
+            return
+        if name == "bool" and call.args and not static(call.args[0]):
+            out.add(
+                "TS02", mod, call,
+                "bool() on a maybe-traced value concretizes the tracer — "
+                "use lax.cond/jnp.where or a static operand",
+                ctx,
+            )
+            return
+        if (
+            name in _SYNC_CALLS
+            and call.args
+            and not static(call.args[0])
+        ):
+            out.add(
+                "TS03", mod, call,
+                f"{name}() on a traced value forces a device sync "
+                "(ConcretizationTypeError under jit) — keep it on the "
+                "device or hoist to the host path",
+                ctx,
+            )
+            return
+        if isinstance(func, ast.Attribute):
+            if func.attr in _SYNC_METHODS and not static(func.value):
+                out.add(
+                    "TS03", mod, call,
+                    f".{func.attr}() inside a traced region is a host "
+                    "sync — move it outside the jit boundary",
+                    ctx,
+                )
+                return
+            dotted = mod.resolve_dotted(func)
+            if (
+                dotted is not None
+                and dotted.startswith(_HOST_CALL_PREFIXES)
+                and any(
+                    not static(a)
+                    for a in list(call.args)
+                    + [k.value for k in call.keywords]
+                )
+            ):
+                out.add(
+                    "TS03", mod, call,
+                    f"{_dotted(func)} on a traced value inside a traced "
+                    "region is a host transfer — use the jnp equivalent",
+                    ctx,
+                )
+                return
+        if _is_obs_call(call, mod) and not guarded:
+            out.add(
+                "TS07", mod, call,
+                "obs/telemetry call inside a traced region without a "
+                "static gate — wrap in `if <static knob>:` so disabled "
+                "telemetry stays zero-cost",
+                ctx,
+            )
+
+    for stmt in fn.node.body:
+        visit(stmt, False)
+
+
+_SET_METHODS = frozenset(
+    {"union", "intersection", "difference", "symmetric_difference"}
+)
+_ARRAY_BUILDERS = frozenset(
+    {"array", "asarray", "fromiter", "stack", "concatenate", "hstack",
+     "vstack", "list", "tuple"}
+)
+
+
+def _is_set_valued(e: ast.AST) -> bool:
+    if isinstance(e, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(e, ast.Call):
+        last = _last_segment(_dotted(e.func))
+        if last in ("set", "frozenset"):
+            return True
+        if (
+            isinstance(e.func, ast.Attribute)
+            and e.func.attr in _SET_METHODS
+        ):
+            return True
+    if isinstance(e, ast.BinOp) and isinstance(
+        e.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+    ):
+        return _is_set_valued(e.left) or _is_set_valued(e.right)
+    return False
+
+
+def _check_module_wide(mod: ModuleInfo, project: Project, out: _Collector) -> None:
+    """TS04 / TS05 apply to host code too — the bug classes they target
+    (id-aliased caches, nondeterministic array layouts) corrupt solves
+    from outside the trace."""
+    for scope, call in project._iter_calls(mod):
+        ctx = scope.display() if scope else f"{mod.name}.<module>"
+        func = call.func
+        # TS04 — id() anywhere except a direct identity comparison
+        if isinstance(func, ast.Name) and func.id == "id" and call.args:
+            parent = getattr(call, "_repro_parent", None)
+            if not isinstance(parent, ast.Compare):
+                out.add(
+                    "TS04", mod, call,
+                    "id()-keyed identity: ids are recycled after gc, so "
+                    "an id-keyed cache aliases dead objects to new ones — "
+                    "key on a stable token (shape/dtype/version) instead",
+                    ctx,
+                )
+        # TS05 — array construction over unordered set iteration
+        last = _last_segment(_dotted(func))
+        if last in _ARRAY_BUILDERS:
+            for a in call.args:
+                if _is_set_valued(a):
+                    out.add(
+                        "TS05", mod, call,
+                        f"{last}() over an unordered set — iteration "
+                        "order varies per process, so the array layout "
+                        "is nondeterministic; sort first",
+                        ctx,
+                    )
+                    break
+
+
+def _annotate_parents(mod: ModuleInfo) -> None:
+    for node in ast.walk(mod.tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node
+
+
+def _check_jit_declaration(fn: FunctionInfo, out: _Collector) -> None:
+    """TS06 — literal static_argnames vs the knob declaration."""
+    if fn.declared_static is None or fn.derived:
+        return
+    from repro import knobs
+
+    mod = fn.module
+    node = fn.decl_node or fn.node
+    ctx = fn.display()
+    declared = set(fn.declared_static)
+    params = set(fn.params)
+    for p in fn.kwonly:
+        kind = knobs.classify(p)
+        if kind == "static" and p not in declared:
+            out.add(
+                "TS06", mod, node,
+                f"'{p}' is a static knob (repro.knobs) but is missing "
+                f"from static_argnames — it will be traced, retracing "
+                "per value or baking a Python branch",
+                ctx,
+            )
+    for name in fn.declared_static:
+        if name not in params:
+            out.add(
+                "TS06", mod, node,
+                f"static_argnames declares '{name}' which is not a "
+                f"parameter of {fn.qualname} — stale declaration",
+                ctx,
+            )
+        elif knobs.classify(name) == "traced":
+            out.add(
+                "TS06", mod, node,
+                f"static_argnames declares '{name}' but repro.knobs "
+                "classifies it as a traced operand — remove it or "
+                "reclassify deliberately",
+                ctx,
+            )
+
+
+def check_project(project: Project) -> List[Finding]:
+    out = _Collector(project)
+    for mod in project.modules.values():
+        _annotate_parents(mod)
+        _check_module_wide(mod, project, out)
+        for fn in mod.functions.values():
+            if fn.traced:
+                _check_traced_function(fn, out)
+            _check_jit_declaration(fn, out)
+    return out.findings

@@ -1,0 +1,89 @@
+"""Runtime trace-safety sanitizer — the dynamic half of jitlint.
+
+Static analysis (rules TS01–TS07) proves hazards *in the source*; this
+module catches the two failure modes that only show up at run time:
+
+* **Silent host transfers** — a traced value crossing the device
+  boundary (``float(x[0])``, implicit device_put of a numpy operand on
+  the warm path).  Armed via ``jax.transfer_guard("disallow")``:
+  any implicit transfer raises instead of silently syncing.  Explicit
+  transfers (``jax.device_get`` / ``jax.device_put`` / ``jnp.asarray``)
+  stay legal — the point is that every host crossing must be *named*.
+
+* **Silent retraces** — a warm solve recompiling because a static knob
+  leaked into traced operands or a shape drifted (the TS06 bug class at
+  run time).  Guarded by snapshotting the solver registry's
+  :func:`repro.solver.backends.trace_count` before the block and
+  asserting it did not move.
+
+Usage (the warm-path pattern used by the tier-1 tests)::
+
+    handle = solver.get(cfg, graph)
+    out = handle.solve(seeds)          # cold: traces once, syncs freely
+    with sanitize.sanitizer():
+        out = handle.solve(seeds)      # warm: zero transfers, zero retraces
+        tree = jax.device_get(out.tree)   # explicit d2h is fine
+
+``sanitizer()`` nests: re-entering keeps the outermost guard armed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+
+class TraceSafetyError(AssertionError):
+    """A warm region retraced (or was misused); carries the counter delta."""
+
+
+@contextlib.contextmanager
+def retrace_guard(key: Optional[str] = None, allow: int = 0) -> Iterator[None]:
+    """Fails if more than ``allow`` solver executables are (re)built inside.
+
+    ``key`` narrows the check to one backend's counter (see
+    :func:`repro.solver.backends.trace_count`); None watches all."""
+    from repro.solver.backends import trace_count
+
+    base = trace_count(key)
+    yield
+    grew = trace_count(key) - base
+    if grew > allow:
+        what = f"backend {key!r}" if key else "the solver registry"
+        raise TraceSafetyError(
+            f"{what} built {grew} new executable(s) inside a warm region "
+            f"(allowed {allow}) — a static knob is leaking into traced "
+            f"operands or an input shape drifted (rule TS06 at run time)"
+        )
+
+
+@contextlib.contextmanager
+def transfer_guard() -> Iterator[None]:
+    """``jax.transfer_guard("disallow")`` as a plain context manager."""
+    import jax
+
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def sanitizer(
+    *,
+    key: Optional[str] = None,
+    allow_retraces: int = 0,
+    guard_transfers: bool = True,
+) -> Iterator[None]:
+    """Arm both runtime guards around a warm region.
+
+    Args:
+      key: narrow the retrace guard to one backend counter.
+      allow_retraces: executables the region is allowed to build (0 for
+        a warm path; pass 1 when the region intentionally compiles).
+      guard_transfers: disarm the transfer guard (retrace guard only)
+        for regions that legitimately stream host data.
+    """
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(retrace_guard(key=key, allow=allow_retraces))
+        if guard_transfers:
+            stack.enter_context(transfer_guard())
+        yield

@@ -28,13 +28,14 @@ Per-vertex state (paper Table II):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import EllGraph, Graph
+from repro.knobs import solver_jit
 
 INF = jnp.inf
 
@@ -172,9 +173,10 @@ def voronoi_cells(
       g: symmetric weighted graph.
       seeds: (S,) int32 seed vertex ids.
       mode: "dense" (FIFO analogue) or "bucket" (priority analogue).
-      delta: bucket width for mode="bucket"; must be > 0 (a zero/negative
-        width never advances the bucket threshold, silently spinning
-        through the full round cap); default mean finite weight.
+      delta: bucket width for mode="bucket"; a STATIC knob — must be a
+        host scalar > 0 (a zero/negative width never advances the bucket
+        threshold; a traced width is rejected outright); default mean
+        finite weight.
       max_iters: safety cap on rounds (default 4n + 64).
       telemetry_rounds: static H — carry a (H+1, 4) per-round telemetry
         buffer through the loop and return it as ``stats.history``.
@@ -194,11 +196,19 @@ def voronoi_cells(
     Returns:
       (VoronoiState, VoronoiStats)
     """
-    # validate eagerly when delta is a concrete host scalar (dense mode
-    # ignores delta, so only bucket mode rejects); traced values bypass
-    # this isinstance check — the bucket loop's stall guard covers them
-    if mode == "bucket" and isinstance(delta, (int, float)) and not delta > 0:
-        raise ValueError(f"delta must be positive, got {delta}")
+    # Δ is a STATIC knob: validation happens on the host path, always.
+    # (It used to ride the trace as an operand, where a traced Δ could
+    # bypass an isinstance check and, at Δ <= 0, stall the bucket loop —
+    # the PR-4 bug class.  A traced Δ is now rejected here outright.)
+    if mode == "bucket" and delta is not None:
+        if not isinstance(delta, (int, float, np.integer, np.floating)):
+            raise TypeError(
+                f"delta must be a host scalar (it is a static knob of the "
+                f"bucket schedule), got {type(delta).__name__} — traced "
+                f"delta values are not supported"
+            )
+        if not delta > 0:
+            raise ValueError(f"delta must be positive, got {delta}")
     if telemetry_rounds < 0:
         raise ValueError(f"telemetry_rounds must be >= 0, got {telemetry_rounds}")
     return _voronoi_cells(
@@ -212,9 +222,7 @@ def voronoi_cells(
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("mode", "max_iters", "telemetry_rounds")
-)
+@solver_jit
 def _voronoi_cells(
     g: Graph,
     seeds: jax.Array,
@@ -281,10 +289,10 @@ def _voronoi_cells(
             # Terminate only when a no-change round had EVERY source active
             # (such a round is equivalent to a dense fixpoint check);
             # otherwise advance the bucket threshold by Δ and keep going.
-            # Stall guard: a non-positive Δ (only reachable as a traced
-            # value that bypassed the eager validation) never advances
-            # theta — exit at the first quiescent round instead of
-            # silently burning the full round cap.
+            # Stall guard (defense in depth): Δ is a static knob now, so
+            # a non-positive value cannot reach this loop — but if one
+            # ever did, it would never advance theta; exit at the first
+            # quiescent round instead of silently burning the round cap.
             max_fin = jnp.max(jnp.where(jnp.isfinite(new.dist), new.dist, -INF))
             done = ~changed & ((theta >= max_fin) | (d <= 0))
             imp = jnp.sum(upd).astype(jnp.float32)
@@ -333,9 +341,7 @@ def _voronoi_cells(
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("frontier_size", "max_rounds", "telemetry_rounds")
-)
+@solver_jit
 def voronoi_cells_frontier(
     ell: EllGraph,
     seeds: jax.Array,

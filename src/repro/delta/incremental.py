@@ -148,10 +148,21 @@ class EllPatcher:
     :meth:`apply` refills exactly the changed vertices' rows (claiming
     spare rows when a vertex outgrows its block) and scatters the small
     host blocks into the resident device arrays, preserving shape.
+
+    Donation contract: :meth:`apply` *donates* the current buffers to the
+    fused scatter (rule TS04's cousin — a donated buffer is dead the
+    moment the call is issued).  Pass ``owns_buffers=True`` only when the
+    EllGraph is private to this patcher (freshly built, no other holder);
+    for a shared view — e.g. the memoized
+    :func:`repro.core.graph.ell_view_cached` — the default takes one
+    private copy before the first donation so the caller's view survives.
     """
 
-    def __init__(self, ell: EllGraph, indptr: np.ndarray):
+    def __init__(
+        self, ell: EllGraph, indptr: np.ndarray, *, owns_buffers: bool = False
+    ):
         self.ell = ell
+        self._owned = bool(owns_buffers)
         k = int(ell.nbr.shape[1])
         self.k = k
         counts = np.diff(np.asarray(indptr, np.int64))
@@ -235,6 +246,16 @@ class EllPatcher:
             wg = np.concatenate([wg, np.repeat(wg[:1], pad, axis=0)])
             vb = np.concatenate([vb, np.full(pad, vb[0], np.int32)])
         ell = self.ell
+        if not self._owned:
+            # first donation would kill buffers an outside holder may
+            # still read — copy once, then donate freely epoch over epoch
+            ell = EllGraph(
+                nbr=jnp.array(ell.nbr, copy=True),
+                wgt=jnp.array(ell.wgt, copy=True),
+                row2v=jnp.array(ell.row2v, copy=True),
+                n=ell.n,
+            )
+            self._owned = True
         new_nbr, new_wgt, new_row2v = _scatter_rows(
             ell.nbr, ell.wgt, ell.row2v,
             jnp.asarray(rows), jnp.asarray(nb), jnp.asarray(wg),
@@ -299,8 +320,10 @@ class IncrementalSession:
             indptr = np.asarray(store.indptr)
         else:
             indptr = store.effective_csr()[0]
+        # store.ell() builds fresh buffers on every call, so the session
+        # is their sole holder and the patcher may donate without copying
         ell = store.ell(ell_width, pad_rows_to=ell_pad_rows)
-        self.patcher = EllPatcher(ell, indptr)
+        self.patcher = EllPatcher(ell, indptr, owns_buffers=True)
 
         st, stats = vmod.voronoi_cells_frontier(
             ell, self._seeds_j, frontier_size=frontier_size

@@ -23,8 +23,6 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +33,7 @@ from repro.core import voronoi as vmod
 from repro.core.graph import EllGraph, Graph, ell_view_cached
 from repro.kernels.minplus import ops as kops
 from repro.solver.config import BACKEND_MODES, SolverConfig
+from repro.knobs import solver_jit
 from repro.solver.registry import (
     SolveOutput,
     SolveTelemetry,
@@ -65,15 +64,13 @@ def trace_count(key: Optional[str] = None) -> int:
 
 # ----------------------------------------------------------------------------
 # Module-level jitted executables (single / batch) — shared by all consumers.
+# Each executable's static_argnames are DERIVED from its keyword-only
+# signature against the repro.solver.knobs classification (one source of
+# truth; hand-copied tuples drift — rule TS06 in repro.analysis).
 # ----------------------------------------------------------------------------
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "num_seeds", "mode", "mst_algo", "max_iters", "telemetry_rounds"
-    ),
-)
+@solver_jit
 def _exec_single_coo(
     g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters, telemetry_rounds,
     init=None,
@@ -92,13 +89,7 @@ def _exec_single_coo(
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "num_seeds", "mst_algo", "frontier_size", "max_iters",
-        "telemetry_rounds",
-    ),
-)
+@solver_jit
 def _exec_single_frontier(
     g, ell, seeds, *, num_seeds, mst_algo, frontier_size, max_iters,
     telemetry_rounds, init=None,
@@ -140,20 +131,7 @@ def _pallas_voronoi(ell, seeds, cfg_kw):
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "num_seeds",
-        "mst_algo",
-        "block_rows",
-        "src_block",
-        "interpret",
-        "frontier",
-        "frontier_size",
-        "max_iters",
-        "telemetry_rounds",
-    ),
-)
+@solver_jit
 def _exec_single_pallas(
     g,
     ell,
@@ -186,20 +164,7 @@ def _exec_single_pallas(
     return smod.finish_pipeline(g, st, stats, num_seeds, mst_algo)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "num_seeds",
-        "mst_algo",
-        "block_rows",
-        "src_block",
-        "interpret",
-        "frontier",
-        "frontier_size",
-        "max_iters",
-        "telemetry_rounds",
-    ),
-)
+@solver_jit
 def _exec_batch_pallas(
     g,
     ell,
@@ -250,12 +215,7 @@ def _pallas_static_kw(cfg: SolverConfig) -> dict:
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "num_seeds", "mode", "mst_algo", "max_iters", "telemetry_rounds"
-    ),
-)
+@solver_jit
 def _exec_batch(
     g, seeds, *, num_seeds, mode, mst_algo, delta, max_iters, telemetry_rounds
 ):
@@ -357,9 +317,12 @@ class SingleBackend(_Backend):
             cfg, artifacts["graph"], seeds, num_seeds,
             ell=artifacts.get("ell"), init=warm_state,
         )
+        # one explicit, batched device→host fetch (TS03 hygiene: the
+        # sanitizer forbids implicit transfers on the warm path)
+        td, ne = jax.device_get((res.tree.total_distance, res.tree.num_edges))
         return SolveOutput(
-            total_distance=float(res.tree.total_distance),
-            num_edges=int(res.tree.num_edges),
+            total_distance=float(td),
+            num_edges=int(ne),
             raw=res,
             telemetry=telemetry_from_counts(
                 res.stats.iterations,
@@ -449,20 +412,26 @@ class BatchBackend(_Backend):
         # lane-sum of the (B, H+1, 4) histories only accumulates rows
         # each lane actually wrote.
         stats = res.stats
-        iters = int(np.max(np.asarray(stats.iterations)))
+        # one explicit, batched device→host fetch for the whole lane
+        # aggregation (TS03 hygiene — no implicit per-field syncs)
+        iterations, relaxations, messages, history, td, ne = jax.device_get(
+            (stats.iterations, stats.relaxations, stats.messages,
+             stats.history, res.tree.total_distance, res.tree.num_edges)
+        )
+        iters = int(np.max(iterations))
         per_round = None
-        if stats.history is not None and cfg.telemetry_rounds > 0:
-            hist = np.asarray(stats.history).sum(axis=0)
+        if history is not None and cfg.telemetry_rounds > 0:
+            hist = np.asarray(history).sum(axis=0)
             per_round = hist[: min(iters, cfg.telemetry_rounds)]
         telem = SolveTelemetry(
             iterations=iters,
-            relaxations=int(round(float(np.sum(np.asarray(stats.relaxations))))),
-            messages=int(round(float(np.sum(np.asarray(stats.messages))))),
+            relaxations=int(round(float(np.sum(relaxations)))),
+            messages=int(round(float(np.sum(messages)))),
             per_round=per_round,
         )
         return SolveOutput(
-            total_distance=np.asarray(res.tree.total_distance),
-            num_edges=np.asarray(res.tree.num_edges),
+            total_distance=np.asarray(td),
+            num_edges=np.asarray(ne),
             raw=res,
             telemetry=telem,
         )

@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro import knobs
+
 BACKENDS: Tuple[str, ...] = ("single", "mesh1d", "mesh2d", "batch")
 MODES: Tuple[str, ...] = ("dense", "bucket", "frontier", "pallas")
 MST_ALGOS: Tuple[str, ...] = ("prim", "boruvka")
@@ -227,3 +229,11 @@ class SolverConfig:
     def replace(self, **kw) -> "SolverConfig":
         """Functional update (re-validates)."""
         return dataclasses.replace(self, **kw)
+
+
+# Every field must be classified static-or-traced in repro.solver.knobs
+# (the single source of truth the jitted executables and the TS06 lint
+# rule both derive from) — an unclassified field fails here, at import.
+knobs.validate_config_coverage(
+    f.name for f in dataclasses.fields(SolverConfig)
+)

@@ -73,7 +73,18 @@ def telemetry_from_counts(
     slot and rows beyond the round count are trimmed here, on the host.
     ``per_rank`` is the raw (H+1, n_ranks, 4) flight-recorder buffer (or
     None), trimmed identically.
+
+    This is the solve's one device→host crossing, so it is *explicit*
+    (``jax.device_get``, one batched fetch) rather than five implicit
+    ``int()``/``np.asarray`` syncs — the runtime sanitizer
+    (:mod:`repro.analysis.sanitize`) treats unnamed transfers on the
+    warm path as errors, and one fetch beats five on a real accelerator.
     """
+    import jax
+
+    iterations, relaxations, messages, history, per_rank = jax.device_get(
+        (iterations, relaxations, messages, history, per_rank)
+    )
     iters = int(iterations)
     per_round = None
     if history is not None and telemetry_rounds > 0:

@@ -1,0 +1,11 @@
+"""Fixture corpus for the jitlint analyzer tests.
+
+Each ``tsNN_*.py`` module carries positive cases (lines tagged with a
+trailing ``# expect: TSNN`` comment) and untagged negative cases; the
+test harness (tests/test_analysis.py) runs the analyzer over a fixture
+file and asserts the finding set equals the tagged set — so every
+finding is asserted to fire AND everything untagged is asserted quiet.
+
+These files are parsed, never imported (the analyzer is pure ``ast``),
+but they are kept ruff-clean because CI lints the tests tree.
+"""

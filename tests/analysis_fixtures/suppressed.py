@@ -1,0 +1,11 @@
+"""Per-line suppression: ``# jitlint: ignore`` silences one finding."""
+
+import jax
+
+
+@jax.jit
+def acknowledged_hazard(x):
+    # a deliberate, reviewed exception is suppressed in place
+    flag = bool(x[0] > 0)  # jitlint: ignore
+    probe = float(x[0])  # expect: TS03
+    return flag, probe

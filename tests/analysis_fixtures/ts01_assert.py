@@ -1,0 +1,27 @@
+"""TS01 — assert on a traced value (positive + negative cases)."""
+
+import jax
+
+
+@jax.jit
+def traced_asserts(x, y):
+    assert (x > 0).all()  # expect: TS01
+    assert x.sum() > y.sum()  # expect: TS01
+    return x + y
+
+
+@jax.jit
+def shape_asserts_are_static(x, y):
+    # shape/dtype metadata is static under trace — these are the
+    # load-bearing kernel-style guards and must stay quiet
+    assert x.shape[0] == y.shape[0]
+    assert x.ndim == 2
+    assert x.shape[0] % 8 == 0
+    return x @ y
+
+
+def host_asserts(x):
+    # never traced: plain asserts on host values are fine
+    assert x > 0
+    assert isinstance(x, int)
+    return x * 2

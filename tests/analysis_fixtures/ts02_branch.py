@@ -1,0 +1,51 @@
+"""TS02 — Python control flow on maybe-traced values."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def branches(x, *, mode):
+    if x.sum() > 0:  # expect: TS02
+        x = x + 1
+    if isinstance(x, float):  # expect: TS02
+        x = x * 2
+    flag = bool(x[0] > 0)  # expect: TS02
+    while x.min() < 0:  # expect: TS02
+        x = x + 1
+    y = x if x.sum() > 0 else -x  # expect: TS02
+    if mode == "dense":  # static knob: quiet
+        x = x * 2
+    if mode == "bucket" and x.shape[0] > 4:  # static and/static: quiet
+        x = x[:4]
+    return x, y, flag
+
+
+@jax.jit
+def none_and_structure_checks(x, opt, tree):
+    # `is None` is static — tracers are never None
+    if opt is not None:
+        x = x + opt
+    # string membership is dict *structure*, static under trace
+    if "bias" in tree:
+        x = x + tree["bias"]
+    return x
+
+
+def host_branches(x, mode):
+    # host function: Python branching is the normal thing to do
+    if x > 0 and mode == "fast":
+        return x
+    return -x
+
+
+@functools.partial(jax.jit, static_argnames=("pair_chunks",))
+def unrolled_static_loop(x, *, pair_chunks=2):
+    # Python-level unrolling over a static knob is standard jax idiom
+    for c in range(pair_chunks):
+        if c == 0:
+            x = x * 2
+        x = x + jnp.float32(c)
+    return x

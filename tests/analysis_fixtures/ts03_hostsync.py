@@ -1,0 +1,31 @@
+"""TS03 — host syncs inside traced regions."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def syncs(x):
+    a = float(x[0])  # expect: TS03
+    b = int(x.sum())  # expect: TS03
+    c = x.item()  # expect: TS03
+    d = x.tolist()  # expect: TS03
+    e = np.asarray(x)  # expect: TS03
+    f = np.maximum(x, 0.0)  # expect: TS03
+    return a + b + c + e + f, d
+
+
+@jax.jit
+def static_conversions_are_fine(x, y):
+    # float()/int()/np on *static* operands is host bookkeeping, not a sync
+    n = int(x.shape[0])
+    scale = float(n) / 2.0
+    cap = np.float32(x.shape[0] * 4 + 64)
+    return x * scale + y * cap
+
+
+def host_conversions(arr):
+    # host path: converting materialized results is the job
+    total = float(arr[0])
+    count = int(arr.shape[0])
+    return np.asarray([total]), count

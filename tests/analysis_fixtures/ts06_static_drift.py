@@ -1,0 +1,52 @@
+"""TS06 — static-knob drift at jit declarations.
+
+Knob names and their static/traced classification come from
+``repro.knobs`` — the same source of truth ``solver_jit`` derives
+``static_argnames`` from.
+"""
+
+import functools
+
+import jax
+
+from repro.knobs import solver_jit
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))  # expect: TS06
+def missing_knob(g, seeds, *, mode, max_iters=None):
+    # max_iters is a static knob but is not declared static here
+    return g, seeds, mode, max_iters
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "num_seeds"))  # expect: TS06
+def stale_declaration(g, seeds, *, mode):
+    # declares num_seeds which is not a parameter at all
+    return g, seeds, mode
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "seeds"))  # expect: TS06
+def traced_operand_declared_static(g, seeds, *, mode):
+    # seeds is a traced operand — marking it static retraces per value
+    return g, seeds, mode
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "max_iters", "telemetry_rounds")
+)
+def fully_declared(g, seeds, *, mode, max_iters=None, telemetry_rounds=0):
+    # every static knob declared: quiet
+    return g, seeds, mode, max_iters, telemetry_rounds
+
+
+@functools.partial(jax.jit, static_argnames=("vb", "edge_block"))
+def kernel_extras_are_not_knobs(x, *, vb, edge_block):
+    # vb/edge_block are kernel shape constants, not SolverConfig knobs —
+    # the rule has nothing to say about them
+    return x, vb, edge_block
+
+
+@solver_jit
+def derived_declaration(g, seeds, *, mode, max_iters=None):
+    # solver_jit derives static_argnames from the knob declaration —
+    # drift is impossible by construction, so the rule skips it
+    return g, seeds, mode, max_iters

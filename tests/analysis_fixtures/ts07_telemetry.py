@@ -1,0 +1,28 @@
+"""TS07 — obs/telemetry calls in traced regions need a static gate."""
+
+import functools
+
+import jax
+
+from repro import obs
+
+
+@jax.jit
+def ungated(x):
+    obs.counter("solver.rounds", 1)  # expect: TS07
+    return x + 1
+
+
+@functools.partial(jax.jit, static_argnames=("telemetry_rounds",))
+def gated(x, *, telemetry_rounds=0):
+    # the zero-cost-when-disabled invariant: a static knob gates the
+    # telemetry, so H=0 compiles it out entirely
+    if telemetry_rounds > 0:
+        obs.counter("solver.rounds", 1)
+    return x + 1
+
+
+def host_telemetry(x):
+    # host-side recording is what obs is for — quiet
+    obs.counter("host.calls", 1)
+    return x

@@ -1,0 +1,297 @@
+"""jitlint analyzer: fixture corpus, region inference, baseline, sanitizer.
+
+The fixture harness is exhaustive in both directions: every line tagged
+``# expect: TSxx`` in tests/analysis_fixtures/*.py must produce that
+finding, and every untagged line must stay quiet — so each fixture file
+is simultaneously the positive AND negative test for its rule.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import analyze_paths, baseline
+from repro.analysis.findings import Finding
+from repro.analysis.regions import Project
+from repro import knobs
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+REPO = os.path.dirname(HERE)
+SRC = os.path.join(REPO, "src", "repro")
+BASELINE_PATH = os.path.join(REPO, "ANALYSIS_BASELINE.json")
+
+_EXPECT = re.compile(r"#\s*expect:\s*([A-Z0-9,\s]+)")
+
+
+def _fixture_files():
+    return sorted(
+        os.path.join(FIXTURES, f)
+        for f in os.listdir(FIXTURES)
+        if f.endswith(".py") and f != "__init__.py"
+    )
+
+
+def _expected_markers(path):
+    """{(lineno, rule)} parsed from trailing ``# expect: TSxx`` comments."""
+    out = set()
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            m = _EXPECT.search(line)
+            if not m:
+                continue
+            for rule in re.split(r"[,\s]+", m.group(1).strip()):
+                if rule:
+                    out.add((lineno, rule))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# fixture corpus: positive + negative per rule
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "path", _fixture_files(), ids=[os.path.basename(p) for p in _fixture_files()]
+)
+def test_fixture_findings_match_markers(path):
+    found = {(f.line, f.rule) for f in analyze_paths([path])}
+    expected = _expected_markers(path)
+    missing = expected - found
+    unexpected = found - expected
+    assert not missing, f"rules that failed to fire: {sorted(missing)}"
+    assert not unexpected, f"false positives: {sorted(unexpected)}"
+
+
+def test_every_rule_has_positive_and_negative_coverage():
+    rules = {f"TS0{i}" for i in range(1, 8)}
+    tagged = set()
+    for path in _fixture_files():
+        tagged |= {r for _, r in _expected_markers(path)}
+    assert tagged == rules, f"rules without a positive fixture: {rules - tagged}"
+    # negative coverage: every fixture file has at least one untagged
+    # function (asserted implicitly by the exact-match harness above)
+
+
+# ----------------------------------------------------------------------------
+# jit-region inference
+# ----------------------------------------------------------------------------
+
+
+def _load_regions():
+    return Project.load([os.path.join(FIXTURES, "regions_nested.py")])
+
+
+def test_transitive_callee_is_traced_with_static_params():
+    proj = _load_regions()
+    (mod,) = proj.modules.values()
+    helper = mod.functions["helper_called_from_jit"]
+    assert helper.traced and not helper.is_root
+    assert helper.param_static == {"x": False, "mode": True}
+
+
+def test_loop_bodies_and_nested_defs_are_traced():
+    proj = _load_regions()
+    (mod,) = proj.modules.values()
+    for name in ("loop_body", "loop_cond", "entry.nested", "make_sharded.body"):
+        fn = mod.functions[name]
+        assert fn.traced, f"{name} should be traced ({fn.trace_reason!r})"
+        assert not any(fn.param_static.values()), f"{name} params must be traced"
+
+
+def test_host_code_is_not_traced():
+    proj = _load_regions()
+    (mod,) = proj.modules.values()
+    assert not mod.functions["plain_helper"].traced
+    assert not mod.functions["make_sharded"].traced
+
+
+def test_root_declaration_parsed():
+    proj = _load_regions()
+    (mod,) = proj.modules.values()
+    entry = mod.functions["entry"]
+    assert entry.is_root
+    assert entry.declared_static == ("mode",)
+    assert entry.param_static["mode"] is True
+    assert entry.param_static["x"] is False
+
+
+# ----------------------------------------------------------------------------
+# baseline: add / suppress / expire round-trip
+# ----------------------------------------------------------------------------
+
+
+def _mk(rule="TS01", path="a.py", ctx="a.f", text="assert x"):
+    return Finding(
+        rule=rule, path=path, line=3, col=4, message="m",
+        context=ctx, line_text=text,
+    )
+
+
+def test_baseline_round_trip_suppresses_everything():
+    findings = [_mk(), _mk(rule="TS03", text="float(x)")]
+    entries = baseline.load(baseline.dump(findings))
+    new, suppressed, expired = baseline.split(findings, entries)
+    assert new == [] and expired == []
+    assert len(suppressed) == 2
+
+
+def test_baseline_is_line_number_free():
+    pinned = baseline.load(baseline.dump([_mk()]))
+    drifted = [
+        Finding(
+            rule="TS01", path="a.py", line=99, col=0, message="m",
+            context="a.f", line_text="assert x",
+        )
+    ]
+    new, suppressed, _ = baseline.split(drifted, pinned)
+    assert new == [] and len(suppressed) == 1
+
+
+def test_baseline_flags_new_and_expired():
+    entries = baseline.load(baseline.dump([_mk()]))
+    fresh = _mk(rule="TS05", text="np.array(set(x))")
+    new, suppressed, expired = baseline.split([fresh], entries)
+    assert new == [fresh]
+    assert suppressed == []
+    assert len(expired) == 1  # the TS01 entry no longer matches
+
+
+def test_baseline_multiset_budget():
+    # two identical findings, one baseline entry: one suppressed, one new
+    entries = baseline.load(baseline.dump([_mk()]))
+    new, suppressed, expired = baseline.split([_mk(), _mk()], entries)
+    assert len(suppressed) == 1 and len(new) == 1 and expired == []
+
+
+# ----------------------------------------------------------------------------
+# self-lint: the repo's own sources against the committed baseline
+# ----------------------------------------------------------------------------
+
+
+def test_self_lint_src_repro_modulo_baseline():
+    findings = analyze_paths([SRC])
+    with open(BASELINE_PATH, encoding="utf-8") as fh:
+        entries = baseline.load(fh.read())
+    new, _suppressed, _expired = baseline.split(findings, entries)
+    assert new == [], "new trace-safety findings in src/repro:\n" + "\n".join(
+        f.render() for f in new
+    )
+
+
+def test_cli_exit_codes(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f(x):\n    return x\n", encoding="utf-8")
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(clean)],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    seeded = tmp_path / "seeded.py"
+    seeded.write_text(
+        "import jax\n\n\n@jax.jit\ndef f(x):\n    assert (x > 0).all()\n"
+        "    return x\n",
+        encoding="utf-8",
+    )
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(seeded)],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert bad.returncode == 1
+    assert "TS01" in bad.stdout
+    # baseline the seeded violation → exit 0 again
+    bl = tmp_path / "bl.json"
+    pin = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(seeded),
+         "--baseline", str(bl), "--update-baseline"],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert pin.returncode == 0
+    again = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(seeded),
+         "--baseline", str(bl)],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert again.returncode == 0, again.stdout + again.stderr
+    assert json.loads(bl.read_text())["findings"], "baseline should pin entries"
+
+
+# ----------------------------------------------------------------------------
+# knob declaration — the TS06 source of truth
+# ----------------------------------------------------------------------------
+
+
+def test_solver_jit_derivation_matches_declaration():
+    def fake(g, seeds, *, mode, max_iters=None, telemetry_rounds=0):
+        return g
+
+    assert knobs.static_argnames_of(fake) == (
+        "mode", "max_iters", "telemetry_rounds",
+    )
+
+
+def test_unclassified_keyword_param_is_rejected():
+    def fake(g, *, not_a_knob=1):
+        return g
+
+    with pytest.raises(TypeError, match="not_a_knob"):
+        knobs.static_argnames_of(fake)
+
+
+def test_knob_aliases_resolve_to_config_fields():
+    assert knobs.classify("frontier") == "static"  # → pallas_frontier
+    assert knobs.classify("max_rounds") == "static"  # → max_iters
+    assert knobs.classify("seeds") == "traced"
+    assert knobs.classify("something_else") is None
+
+
+# ----------------------------------------------------------------------------
+# runtime sanitizer
+# ----------------------------------------------------------------------------
+
+
+def test_retrace_guard_fires_on_new_executable():
+    from repro.analysis import sanitize
+    from repro.solver import backends
+
+    with pytest.raises(sanitize.TraceSafetyError, match="executable"):
+        with sanitize.retrace_guard():
+            backends._bump("single")
+
+
+def test_retrace_guard_allowance_and_key():
+    from repro.analysis import sanitize
+    from repro.solver import backends
+
+    with sanitize.retrace_guard(allow=1):
+        backends._bump("single")
+    with sanitize.retrace_guard(key="mesh1d"):
+        backends._bump("single")  # other backend's counter: not watched
+
+
+def test_transfer_guard_blocks_implicit_h2d():
+    import jax.numpy as jnp
+
+    from repro.analysis import sanitize
+
+    x = jnp.arange(4.0)
+    with pytest.raises(Exception, match="[Tt]ransfer"):
+        with sanitize.sanitizer():
+            float(x[0])  # implicit h2d of the index under disallow
+
+
+def test_sanitizer_allows_explicit_transfers():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import sanitize
+
+    x = jnp.arange(4.0)
+    with sanitize.sanitizer():
+        host = jax.device_get(x)  # named transfer: legal
+    assert host.shape == (4,)

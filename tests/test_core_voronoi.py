@@ -92,9 +92,10 @@ def test_bucket_delta_zero_rejected():
     np.testing.assert_allclose(np.asarray(st_.dist), dist)
 
 
-def test_bucket_delta_zero_traced_does_not_spin():
-    """A traced delta bypasses the eager isinstance validation; the
-    bucket loop's stall guard must still exit early, not burn 4n+64."""
+def test_bucket_delta_traced_rejected_loudly():
+    """Δ is a static knob: a traced value can no longer bypass validation
+    and stall the bucket loop (the PR-4 bug class) — it is rejected
+    outright on the host path, before any trace runs."""
     import jax
 
     src, dst, w, n, seeds, edges = random_instance(0)
@@ -102,8 +103,19 @@ def test_bucket_delta_zero_traced_does_not_spin():
     f = jax.jit(
         lambda d: voronoi_cells(g, jnp.asarray(seeds), mode="bucket", delta=d)
     )
-    _, stats = f(0.0)
-    assert int(stats.iterations) < n  # quiescent exit, not the full cap
+    with pytest.raises(TypeError, match="host scalar"):
+        f(0.0)
+    # host scalars still validate eagerly, including numpy scalars
+    with pytest.raises(ValueError, match="delta must be positive"):
+        voronoi_cells(
+            g, jnp.asarray(seeds), mode="bucket", delta=np.float32(0.0)
+        )
+    # and a positive numpy scalar is a valid static width
+    st_, _ = voronoi_cells(
+        g, jnp.asarray(seeds), mode="bucket", delta=np.float32(2.0)
+    )
+    dist, _, _ = ref.voronoi_ref(n, edges, seeds.tolist())
+    np.testing.assert_allclose(np.asarray(st_.dist), dist)
 
 
 def test_voronoi_cells_frontier_mode_redirect():
