@@ -12,6 +12,12 @@ Lifecycle:
   * a finding with no entry is **new** → exit 1;
   * an entry with no finding is **expired** — reported as fixable debt
     and removed by ``--update-baseline``.
+
+Since the spmd layer landed, the committed file is **sectioned**
+(format 2): the ``ast`` and ``spmd`` analyzers each own one named entry
+list, and each run only splits/expires/rewrites *its own* section — an
+ast run can never expire spmd debt or vice versa.  Format-1 files (a
+flat ``findings`` list) load as the ``ast`` section for compatibility.
 """
 
 from __future__ import annotations
@@ -22,6 +28,8 @@ from typing import Dict, Iterable, List, Tuple
 from repro.analysis.findings import Finding
 
 _FORMAT = 1
+_FORMAT_SECTIONED = 2
+SECTIONS = ("ast", "spmd")
 
 
 def _entry(f: Finding) -> Dict[str, str]:
@@ -54,10 +62,53 @@ def dump(findings: Iterable[Finding]) -> str:
 
 
 def load(text: str) -> List[Dict[str, str]]:
-    data = json.loads(text) if text.strip() else {"findings": []}
-    if not isinstance(data, dict) or "findings" not in data:
-        raise ValueError("baseline must be {'format': 1, 'findings': [...]}")
-    return list(data["findings"])
+    """Legacy flat view: the ``ast`` section of any supported format."""
+    return load_sections(text).get("ast", [])
+
+
+def load_sections(text: str) -> Dict[str, List[Dict[str, str]]]:
+    """Section name → entry list, for either on-disk format.
+
+    Format 2 files carry ``{"format": 2, "sections": {"ast": [...],
+    "spmd": [...]}}``; format 1 files (flat ``findings``) come back as
+    ``{"ast": [...]}`` so pre-sectioned baselines keep gating."""
+    data = json.loads(text) if text.strip() else {"sections": {}}
+    if isinstance(data, dict) and isinstance(data.get("sections"), dict):
+        return {
+            str(name): list(entries)
+            for name, entries in data["sections"].items()
+        }
+    if isinstance(data, dict) and "findings" in data:
+        return {"ast": list(data["findings"])}
+    raise ValueError(
+        "baseline must be {'format': 2, 'sections': {...}} "
+        "or the legacy {'format': 1, 'findings': [...]}"
+    )
+
+
+def dump_sections(sections: Dict[str, Iterable]) -> str:
+    """Serialize a sectioned baseline (format 2).
+
+    Each section's value may be Findings (freshly pinned) or already-
+    serialized entry dicts (a section preserved verbatim from a prior
+    load — the update path for the *other* analyzer's debt)."""
+    out: Dict[str, List[Dict[str, str]]] = {}
+    for name in sorted(sections):
+        entries: List[Dict[str, str]] = []
+        for item in sections[name]:
+            entries.append(_entry(item) if isinstance(item, Finding) else dict(item))
+        entries.sort(key=lambda e: (e.get("path", ""), e.get("rule", ""),
+                                    e.get("context", ""), e.get("line", "")))
+        seen, unique = set(), []
+        for e in entries:
+            k = _key(e)
+            if k not in seen:
+                seen.add(k)
+                unique.append(e)
+        out[name] = unique
+    return json.dumps(
+        {"format": _FORMAT_SECTIONED, "sections": out}, indent=2
+    ) + "\n"
 
 
 def split(

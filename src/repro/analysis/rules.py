@@ -4,7 +4,8 @@ Rule ids are stable API — they appear in findings output, in
 ``ANALYSIS_BASELINE.json``, and in ``# jitlint: ignore`` comments:
 
   TS01  ``assert`` on a traced value (never fires under jit)
-  TS02  Python branch / ``isinstance`` / ``bool()`` on a maybe-traced value
+  TS02  Python branch / ``match`` / ``isinstance`` / ``bool()`` /
+        conditional expression on a maybe-traced value
   TS03  host sync inside a traced region (``float()`` / ``int()`` /
         ``.item()`` / ``np.asarray`` on a traced value)
   TS04  ``id()``-keyed identity (ids are reused after gc — the PR-7 cache
@@ -18,6 +19,9 @@ Rule ids are stable API — they appear in findings output, in
         declared name classified as a traced operand
   TS07  telemetry / obs call inside a traced region not gated by a
         static knob (breaks the zero-cost-when-disabled invariant)
+
+``SUP01`` is the meta-rule: a scoped suppression comment
+(``# jitlint: ignore[TS03]``) naming a rule id no analyzer layer knows.
 
 Staticness (:func:`is_static`) is deliberately two-sided: optimistic for
 host values (closure variables, module globals, shape attributes) so the
@@ -41,8 +45,11 @@ from repro.analysis.regions import (
     ModuleInfo,
     Project,
 )
-
-SUPPRESS_MARKER = "jitlint: ignore"
+from repro.analysis.suppress import (
+    SUPPRESS_MARKER,
+    suppresses,
+    unknown_rule_ids,
+)
 
 # numpy-call results are host values (static) but calling them on a
 # traced operand is a host sync (TS03)
@@ -302,7 +309,7 @@ class _Collector:
         if key in self._seen:
             return
         text = mod.line_text(line)
-        if SUPPRESS_MARKER in text:
+        if suppresses(text, rule):
             return
         self._seen.add(key)
         self.findings.append(
@@ -368,6 +375,30 @@ def _check_traced_function(fn: FunctionInfo, out: _Collector) -> None:
                 "in at trace time — use jnp.where/lax.cond",
                 ctx,
             )
+        if isinstance(node, ast.Match):
+            if not static(node.subject):
+                out.add(
+                    "TS02", mod, node,
+                    "`match` on a maybe-traced subject compares against "
+                    "the tracer at trace time (patterns never bind the "
+                    "runtime value) — use lax.switch/lax.cond or match "
+                    "on a static knob",
+                    ctx,
+                )
+            for case in node.cases:
+                if case.guard is not None and not static(case.guard):
+                    out.add(
+                        "TS02", mod, case.guard,
+                        "`case ... if` guard on a maybe-traced value is "
+                        "baked in at trace time — use lax.cond or a "
+                        "static operand",
+                        ctx,
+                    )
+            visit(node.subject, guarded)
+            for case in node.cases:
+                for stmt in case.body:
+                    visit(stmt, guarded)
+            return
         if isinstance(node, ast.Call):
             _check_call(node, guarded)
         for child in ast.iter_child_nodes(node):
@@ -505,6 +536,51 @@ def _check_module_wide(mod: ModuleInfo, project: Project, out: _Collector) -> No
                     break
 
 
+class _Loc:
+    """A bare (lineno, col_offset) stand-in for comment-level findings."""
+
+    def __init__(self, lineno: int, col_offset: int) -> None:
+        self.lineno = lineno
+        self.col_offset = col_offset
+
+
+def _comment_lines(mod: ModuleInfo):
+    """(lineno, comment_text) for every real ``#`` comment token — a
+    docstring *mentioning* the marker is not a suppression."""
+    import io
+    import tokenize
+
+    try:
+        toks = tokenize.generate_tokens(
+            io.StringIO("\n".join(mod.lines) + "\n").readline
+        )
+        return [
+            (t.start[0], t.string)
+            for t in toks
+            if t.type == tokenize.COMMENT
+        ]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return []
+
+
+def _check_suppression_comments(mod: ModuleInfo, out: _Collector) -> None:
+    """SUP01 — a scoped ``# jitlint: ignore[...]`` naming an unknown rule
+    id suppresses nothing while looking reviewed; flag the typo itself."""
+    for lineno, comment in _comment_lines(mod):
+        if SUPPRESS_MARKER not in comment:
+            continue
+        raw = mod.lines[lineno - 1] if lineno <= len(mod.lines) else comment
+        bad = unknown_rule_ids(comment)
+        if bad:
+            out.add(
+                "SUP01", mod, _Loc(lineno, max(raw.find("#"), 0)),
+                f"suppression names unknown rule id(s) {', '.join(bad)} — "
+                "no analyzer emits them, so nothing is suppressed; fix "
+                "the id or drop it",
+                f"{mod.name}.<module>",
+            )
+
+
 def _annotate_parents(mod: ModuleInfo) -> None:
     for node in ast.walk(mod.tree):
         for child in ast.iter_child_nodes(node):
@@ -554,6 +630,7 @@ def check_project(project: Project) -> List[Finding]:
     out = _Collector(project)
     for mod in project.modules.values():
         _annotate_parents(mod)
+        _check_suppression_comments(mod, out)
         _check_module_wide(mod, project, out)
         for fn in mod.functions.values():
             if fn.traced:

@@ -1,0 +1,25 @@
+"""Jaxpr-level SPMD collective-soundness and numeric-range analyses.
+
+The ast layer (:mod:`repro.analysis.rules`) sees source text; this layer
+sees the *traced programs* — it AOT-traces every registered backend×mode
+combo through the real solver executables and runs three dataflow
+analyses over the resulting ClosedJaxprs:
+
+  :mod:`.uniformity`  replica-uniformity lattice   → SP01, SP02, SP03
+  :mod:`.intervals`   value-range abstract interp  → NU01, NU02
+  :mod:`.donation`    donated-buffer liveness      → DN01
+
+:mod:`.harness` owns tracing (tiny graph, (1,1) mesh, live registry);
+:mod:`.selftest` keeps one deliberately-broken program per rule so CI can
+prove the gate fires.  Findings flow through the same
+:mod:`repro.analysis.findings` / :mod:`repro.analysis.baseline` plumbing
+as the ast layer — one sectioned ``ANALYSIS_BASELINE.json``, one CLI.
+"""
+
+from repro.analysis.spmd.harness import (  # noqa: F401
+    analyze_all,
+    analyze_combo,
+    analyze_jaxpr,
+    combos,
+    trace_combo,
+)

@@ -333,6 +333,53 @@ class SingleBackend(_Backend):
             ),
         )
 
+    def dispatch(
+        self,
+        cfg: SolverConfig,
+        g: Graph,
+        seeds,
+        num_seeds: int,
+        ell: Optional[EllGraph] = None,
+        init=None,
+    ):
+        """(jitted_fn, args, kwargs) for one config — the single source of
+        the executable/argument pairing, shared by :meth:`solve_raw`
+        (calls it) and :func:`trace_for_analysis` (AOT-traces it)."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if init is not None and cfg.mode not in ("dense", "bucket", "frontier"):
+            raise ValueError(
+                f"warm-start init is only supported for mode "
+                f"'dense'|'bucket'|'frontier', not {cfg.mode!r}"
+            )
+        if cfg.mode == "frontier":
+            if ell is None:
+                ell = ell_view_cached(g, cfg.ell_width)
+            return _exec_single_frontier, (g, ell, seeds), dict(
+                num_seeds=num_seeds,
+                mst_algo=cfg.mst_algo,
+                frontier_size=cfg.frontier_size,
+                max_iters=cfg.max_iters,
+                telemetry_rounds=cfg.telemetry_rounds,
+                init=init,
+            )
+        if cfg.mode == "pallas":
+            if ell is None:
+                ell = ell_view_cached(g, cfg.ell_width)
+            return _exec_single_pallas, (g, ell, seeds), dict(
+                num_seeds=num_seeds,
+                mst_algo=cfg.mst_algo,
+                **_pallas_static_kw(cfg),
+            )
+        return _exec_single_coo, (g, seeds), dict(
+            num_seeds=num_seeds,
+            mode=cfg.mode,
+            mst_algo=cfg.mst_algo,
+            delta=cfg.delta,
+            max_iters=cfg.max_iters,
+            telemetry_rounds=cfg.telemetry_rounds,
+            init=init,
+        )
+
     def solve_raw(
         self,
         cfg: SolverConfig,
@@ -351,48 +398,8 @@ class SingleBackend(_Backend):
         with one violated-edge sweep, so its warm work is proportional
         to the reset region.  Pallas has no warm path.
         """
-        seeds = jnp.asarray(seeds, jnp.int32)
-        if init is not None and cfg.mode not in ("dense", "bucket", "frontier"):
-            raise ValueError(
-                f"warm-start init is only supported for mode "
-                f"'dense'|'bucket'|'frontier', not {cfg.mode!r}"
-            )
-        if cfg.mode == "frontier":
-            if ell is None:
-                ell = ell_view_cached(g, cfg.ell_width)
-            return _exec_single_frontier(
-                g,
-                ell,
-                seeds,
-                num_seeds=num_seeds,
-                mst_algo=cfg.mst_algo,
-                frontier_size=cfg.frontier_size,
-                max_iters=cfg.max_iters,
-                telemetry_rounds=cfg.telemetry_rounds,
-                init=init,
-            )
-        if cfg.mode == "pallas":
-            if ell is None:
-                ell = ell_view_cached(g, cfg.ell_width)
-            return _exec_single_pallas(
-                g,
-                ell,
-                seeds,
-                num_seeds=num_seeds,
-                mst_algo=cfg.mst_algo,
-                **_pallas_static_kw(cfg),
-            )
-        return _exec_single_coo(
-            g,
-            seeds,
-            num_seeds=num_seeds,
-            mode=cfg.mode,
-            mst_algo=cfg.mst_algo,
-            delta=cfg.delta,
-            max_iters=cfg.max_iters,
-            telemetry_rounds=cfg.telemetry_rounds,
-            init=init,
-        )
+        fn, args, kw = self.dispatch(cfg, g, seeds, num_seeds, ell, init)
+        return fn(*args, **kw)
 
 
 @register_backend("batch")
@@ -436,6 +443,35 @@ class BatchBackend(_Backend):
             telemetry=telem,
         )
 
+    def dispatch(
+        self,
+        cfg: SolverConfig,
+        g: Graph,
+        seeds,
+        num_seeds: int,
+        ell: Optional[EllGraph] = None,
+    ):
+        """(jitted_fn, args, kwargs) — see :meth:`SingleBackend.dispatch`."""
+        seeds = jnp.asarray(seeds, jnp.int32)
+        if seeds.ndim != 2:
+            raise ValueError(f"seeds must be (B, S), got shape {seeds.shape}")
+        if cfg.mode == "pallas":
+            if ell is None:
+                ell = ell_view_cached(g, cfg.ell_width)
+            return _exec_batch_pallas, (g, ell, seeds), dict(
+                num_seeds=num_seeds,
+                mst_algo=cfg.mst_algo,
+                **_pallas_static_kw(cfg),
+            )
+        return _exec_batch, (g, seeds), dict(
+            num_seeds=num_seeds,
+            mode=cfg.mode,
+            mst_algo=cfg.mst_algo,
+            delta=cfg.delta,
+            max_iters=cfg.max_iters,
+            telemetry_rounds=cfg.telemetry_rounds,
+        )
+
     def solve_raw(
         self,
         cfg: SolverConfig,
@@ -444,30 +480,8 @@ class BatchBackend(_Backend):
         num_seeds: int,
         ell: Optional[EllGraph] = None,
     ) -> smod.SteinerResult:
-        seeds = jnp.asarray(seeds, jnp.int32)
-        if seeds.ndim != 2:
-            raise ValueError(f"seeds must be (B, S), got shape {seeds.shape}")
-        if cfg.mode == "pallas":
-            if ell is None:
-                ell = ell_view_cached(g, cfg.ell_width)
-            return _exec_batch_pallas(
-                g,
-                ell,
-                seeds,
-                num_seeds=num_seeds,
-                mst_algo=cfg.mst_algo,
-                **_pallas_static_kw(cfg),
-            )
-        return _exec_batch(
-            g,
-            seeds,
-            num_seeds=num_seeds,
-            mode=cfg.mode,
-            mst_algo=cfg.mst_algo,
-            delta=cfg.delta,
-            max_iters=cfg.max_iters,
-            telemetry_rounds=cfg.telemetry_rounds,
-        )
+        fn, args, kw = self.dispatch(cfg, g, seeds, num_seeds, ell)
+        return fn(*args, **kw)
 
 
 def _device_mesh(shape, axes):
@@ -517,6 +531,41 @@ class Mesh1DBackend(_Backend):
         if cfg.mode == "frontier":
             return (part.nbr, part.wgt, part.row2v)
         return (part.src, part.dst, part.w)
+
+    @staticmethod
+    def build_executable(
+        cfg: SolverConfig,
+        mesh,
+        part,
+        num_seeds: int,
+        *,
+        vert_axis: str = "model",
+        replica_axes: Sequence[str] = ("data",),
+    ):
+        """The jitted shard_map executable one (config, mesh, partition)
+        pair runs — shared by :meth:`solve_prepared` (compile + execute)
+        and :func:`trace_for_analysis` (jaxpr only)."""
+        from repro.core.dist_steiner import DistSteinerConfig, make_dist_steiner
+
+        dcfg = DistSteinerConfig(
+            n=part.n,
+            nb=part.nb,
+            num_seeds=num_seeds,
+            mode=cfg.mode,
+            mst_algo=cfg.mst_algo,
+            local_steps=cfg.local_steps,
+            pair_chunks=cfg.pair_chunks,
+            max_iters=cfg.max_iters,
+            delta=cfg.delta,
+            fuse_gather=cfg.fuse_gather,
+            lab_i16=cfg.lab_i16,
+            frontier_size=cfg.frontier_size,
+            telemetry_rounds=cfg.telemetry_rounds,
+            telemetry_per_rank=cfg.telemetry_per_rank,
+        )
+        return make_dist_steiner(
+            mesh, dcfg, vert_axis=vert_axis, replica_axes=tuple(replica_axes)
+        )
 
     def _prepare_frontier(self, cfg: SolverConfig, g, store, mesh):
         """Sharded-ELL artifacts for the prioritized schedule.
@@ -673,12 +722,7 @@ class Mesh1DBackend(_Backend):
         share it.  ``executables``/``edges`` come from the handle when
         present; the legacy path passes neither and pays placement +
         trace per call."""
-        from repro.core.dist_steiner import (
-            DistSteinerConfig,
-            EllPartition,
-            make_dist_steiner,
-            result_from_device,
-        )
+        from repro.core.dist_steiner import EllPartition, result_from_device
 
         if cfg.mode == "frontier" and not isinstance(part, EllPartition):
             raise TypeError(
@@ -692,24 +736,9 @@ class Mesh1DBackend(_Backend):
         key = (len(seeds), vert_axis, replica_axes)
         fn = None if executables is None else executables.get(key)
         if fn is None:
-            dcfg = DistSteinerConfig(
-                n=part.n,
-                nb=part.nb,
-                num_seeds=len(seeds),
-                mode=cfg.mode,
-                mst_algo=cfg.mst_algo,
-                local_steps=cfg.local_steps,
-                pair_chunks=cfg.pair_chunks,
-                max_iters=cfg.max_iters,
-                delta=cfg.delta,
-                fuse_gather=cfg.fuse_gather,
-                lab_i16=cfg.lab_i16,
-                frontier_size=cfg.frontier_size,
-                telemetry_rounds=cfg.telemetry_rounds,
-                telemetry_per_rank=cfg.telemetry_per_rank,
-            )
-            fn = make_dist_steiner(
-                mesh, dcfg, vert_axis=vert_axis, replica_axes=replica_axes
+            fn = self.build_executable(
+                cfg, mesh, part, len(seeds),
+                vert_axis=vert_axis, replica_axes=replica_axes,
             )
             _bump("mesh1d")
             if executables is not None:
@@ -728,6 +757,34 @@ class Mesh2DBackend(_Backend):
 
     preprocessing = ("mesh", "partition_2d", "device_put")
     seeds_ndim = 1
+
+    @staticmethod
+    def build_executable(
+        cfg: SolverConfig,
+        mesh,
+        part,
+        num_seeds: int,
+        *,
+        row_axis: str = "data",
+        col_axis: str = "model",
+    ):
+        """See :meth:`Mesh1DBackend.build_executable`."""
+        from repro.core.dist_steiner_2d import make_dist_steiner_2d
+
+        return make_dist_steiner_2d(
+            mesh,
+            n=part.n,
+            nf=part.nf,
+            num_seeds=num_seeds,
+            mode=cfg.mode,
+            mst_algo=cfg.mst_algo,
+            max_iters=cfg.max_iters,
+            delta=cfg.delta,
+            row_axis=row_axis,
+            col_axis=col_axis,
+            telemetry_rounds=cfg.telemetry_rounds,
+            telemetry_per_rank=cfg.telemetry_per_rank,
+        )
 
     def prepare(self, cfg: SolverConfig, g) -> dict:
         from repro.core.dist_steiner_2d import partition_edges_2d
@@ -820,25 +877,14 @@ class Mesh2DBackend(_Backend):
         executables: Optional[dict] = None,
     ):
         from repro.core.dist_steiner import result_from_device
-        from repro.core.dist_steiner_2d import make_dist_steiner_2d
 
         seeds = np.asarray(seeds, np.int32)
         key = (len(seeds), row_axis, col_axis)
         fn = None if executables is None else executables.get(key)
         if fn is None:
-            fn = make_dist_steiner_2d(
-                mesh,
-                n=part.n,
-                nf=part.nf,
-                num_seeds=len(seeds),
-                mode=cfg.mode,
-                mst_algo=cfg.mst_algo,
-                max_iters=cfg.max_iters,
-                delta=cfg.delta,
-                row_axis=row_axis,
-                col_axis=col_axis,
-                telemetry_rounds=cfg.telemetry_rounds,
-                telemetry_per_rank=cfg.telemetry_per_rank,
+            fn = self.build_executable(
+                cfg, mesh, part, len(seeds),
+                row_axis=row_axis, col_axis=col_axis,
             )
             _bump("mesh2d")
             if executables is not None:
@@ -849,3 +895,89 @@ class Mesh2DBackend(_Backend):
             )
         out = fn(*edges, _place_replicated(mesh, seeds))
         return result_from_device(out, part.n)
+
+
+# ----------------------------------------------------------------------------
+# Trace-for-analysis hook — the spmd analyzer's entry into REAL executables.
+# ----------------------------------------------------------------------------
+
+
+def trace_for_analysis(cfg: SolverConfig, graph, seeds, num_seeds=None):
+    """AOT-trace the exact executable ``cfg`` would run — no compile, no
+    execution — and return jax's ``Traced`` stage (``.jaxpr`` is the
+    ClosedJaxpr).  :mod:`repro.analysis.spmd` analyzes these jaxprs, so
+    its verdicts are about the solver's real programs, not hand-written
+    mockups of them.
+
+    Single/batch trace the shared module-level executables through the
+    same ``dispatch()`` the solve path uses; mesh backends build their
+    shard_map executable through the same ``build_executable()`` the
+    prepared-handle path caches.  Partitioning runs on the host exactly
+    as in ``prepare()`` but nothing is device_put — tracing only needs
+    avals, which keeps the hook runnable on a 1-device CPU host.
+    """
+    from repro.solver.registry import get_backend
+
+    seeds = np.asarray(seeds, np.int32)
+    if num_seeds is None:
+        num_seeds = int(seeds.shape[-1])
+    backend = get_backend(cfg.backend)
+    if cfg.backend == "single":
+        ell = (
+            ell_view_cached(graph, cfg.ell_width)
+            if cfg.mode in ("frontier", "pallas")
+            else None
+        )
+        fn, args, kw = backend.dispatch(cfg, graph, seeds, num_seeds, ell=ell)
+        return fn.trace(*args, **kw)
+    if cfg.backend == "batch":
+        if seeds.ndim != 2:
+            seeds = seeds[None, :]
+        ell = (
+            ell_view_cached(graph, cfg.ell_width)
+            if cfg.mode == "pallas"
+            else None
+        )
+        fn, args, kw = backend.dispatch(cfg, graph, seeds, num_seeds, ell=ell)
+        return fn.trace(*args, **kw)
+    mesh = _device_mesh(cfg.mesh_shape, ("data", "model"))
+    if cfg.backend == "mesh1d":
+        from repro.core.dist_steiner import partition_edges, partition_ell
+
+        n_replica, n_blocks = cfg.mesh_shape
+        if cfg.mode == "frontier":
+            part = partition_ell(
+                ell_view_cached(graph, cfg.ell_width),
+                n_replica=n_replica,
+                n_blocks=n_blocks,
+            )
+            arrays = (part.nbr, part.wgt, part.row2v)
+        else:
+            part = partition_edges(
+                np.asarray(graph.src),
+                np.asarray(graph.dst),
+                np.asarray(graph.w),
+                graph.n,
+                n_replica=n_replica,
+                n_blocks=n_blocks,
+                symmetrize=False,
+            )
+            arrays = (part.src, part.dst, part.w)
+        fn = backend.build_executable(cfg, mesh, part, len(seeds))
+        return fn.trace(*arrays, seeds)
+    if cfg.backend == "mesh2d":
+        from repro.core.dist_steiner_2d import partition_edges_2d
+
+        R, C = cfg.mesh_shape
+        part = partition_edges_2d(
+            np.asarray(graph.src),
+            np.asarray(graph.dst),
+            np.asarray(graph.w),
+            graph.n,
+            R=R,
+            C=C,
+            symmetrize=False,
+        )
+        fn = backend.build_executable(cfg, mesh, part, len(seeds))
+        return fn.trace(part.src_row, part.dst_col, part.w, seeds)
+    raise ValueError(f"unknown backend {cfg.backend!r}")

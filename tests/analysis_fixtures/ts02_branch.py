@@ -23,6 +23,28 @@ def branches(x, *, mode):
     return x, y, flag
 
 
+@functools.partial(jax.jit, static_argnames=("mode",))
+def match_dispatch(x, *, mode):
+    match x.sum():  # expect: TS02
+        case 0:
+            x = x - 1
+        case _:
+            x = x + 1
+    match mode:  # static knob subject: quiet
+        case "dense":
+            x = x * 2
+        case _:
+            x = x * 3
+    match mode:
+        case "dense" if x.min() > 0:  # expect: TS02
+            x = x / 2
+        case _:
+            pass
+    sign = 1.0 if x.sum() > 0 else -1.0  # expect: TS02
+    scale = 2.0 if mode == "dense" else 3.0  # static condition: quiet
+    return x * sign * scale
+
+
 @jax.jit
 def none_and_structure_checks(x, opt, tree):
     # `is None` is static — tracers are never None

@@ -68,7 +68,7 @@ def test_fixture_findings_match_markers(path):
 
 
 def test_every_rule_has_positive_and_negative_coverage():
-    rules = {f"TS0{i}" for i in range(1, 8)}
+    rules = {f"TS0{i}" for i in range(1, 8)} | {"SUP01"}
     tagged = set()
     for path in _fixture_files():
         tagged |= {r for _, r in _expected_markers(path)}
@@ -169,6 +169,87 @@ def test_baseline_multiset_budget():
 
 
 # ----------------------------------------------------------------------------
+# suppression comments: blanket / scoped / unknown-id forms
+# ----------------------------------------------------------------------------
+
+
+def test_suppression_parsing_forms():
+    from repro.analysis.suppress import (
+        parse_suppression, suppresses, unknown_rule_ids,
+    )
+
+    assert parse_suppression("x = 1") is None
+    assert parse_suppression("x = 1  # jitlint: ignore") == frozenset()
+    assert parse_suppression("x  # jitlint: ignore[TS03, sp01]") == {
+        "TS03", "SP01",
+    }
+    # blanket silences everything; scoped only its list
+    assert suppresses("x  # jitlint: ignore", "TS01")
+    assert suppresses("x  # jitlint: ignore[TS03]", "TS03")
+    assert not suppresses("x  # jitlint: ignore[TS03]", "TS01")
+    assert not suppresses("x = 1", "TS01")
+    # unknown ids: only scoped forms are validated
+    assert unknown_rule_ids("x  # jitlint: ignore[TS99, SP01]") == ("TS99",)
+    assert unknown_rule_ids("x  # jitlint: ignore") == ()
+
+
+def test_sup01_not_raised_for_docstring_mentions(tmp_path):
+    mod = tmp_path / "doc.py"
+    mod.write_text(
+        '"""Docs may mention # jitlint: ignore[XX99] without tripping."""\n'
+        "MARKER = 'jitlint: ignore[YY88]'\n",
+        encoding="utf-8",
+    )
+    assert analyze_paths([str(mod)]) == []
+
+
+# ----------------------------------------------------------------------------
+# sectioned baseline: the ast and spmd layers share one file
+# ----------------------------------------------------------------------------
+
+
+def test_sectioned_baseline_round_trip():
+    ast_f = [_mk(), _mk(rule="TS03", text="float(x)")]
+    spmd_f = [_mk(rule="SP01", path="core.py", ctx="mesh1d/dense")]
+    text = baseline.dump_sections({"ast": ast_f, "spmd": spmd_f})
+    sections = baseline.load_sections(text)
+    assert set(sections) == {"ast", "spmd"}
+    new, suppressed, expired = baseline.split(ast_f, sections["ast"])
+    assert new == [] and expired == [] and len(suppressed) == 2
+    new, suppressed, expired = baseline.split(spmd_f, sections["spmd"])
+    assert new == [] and expired == [] and len(suppressed) == 1
+
+
+def test_sectioned_baseline_sections_do_not_interfere():
+    # an ast run gating against ITS section must not see spmd entries as
+    # expired, and vice versa — each layer owns exactly one section
+    ast_f = [_mk()]
+    spmd_f = [_mk(rule="SP01", path="core.py", ctx="mesh1d/dense")]
+    sections = baseline.load_sections(
+        baseline.dump_sections({"ast": ast_f, "spmd": spmd_f})
+    )
+    _, _, expired_ast = baseline.split(ast_f, sections["ast"])
+    _, _, expired_spmd = baseline.split(spmd_f, sections["spmd"])
+    assert expired_ast == [] and expired_spmd == []
+    # round-trip an UPDATE of one section: the other survives verbatim
+    sections["ast"] = []  # ast debt fully fixed
+    text = baseline.dump_sections(sections)
+    reloaded = baseline.load_sections(text)
+    assert reloaded["ast"] == []
+    assert len(reloaded["spmd"]) == 1
+    assert reloaded["spmd"][0]["rule"] == "SP01"
+
+
+def test_legacy_format1_loads_as_ast_section():
+    text = baseline.dump([_mk()])  # format 1 writer
+    sections = baseline.load_sections(text)
+    assert set(sections) == {"ast"}
+    assert len(sections["ast"]) == 1
+    # and the legacy flat loader still sees it
+    assert baseline.load(text) == sections["ast"]
+
+
+# ----------------------------------------------------------------------------
 # self-lint: the repo's own sources against the committed baseline
 # ----------------------------------------------------------------------------
 
@@ -218,7 +299,52 @@ def test_cli_exit_codes(tmp_path):
         capture_output=True, text=True, env=env, cwd=REPO,
     )
     assert again.returncode == 0, again.stdout + again.stderr
-    assert json.loads(bl.read_text())["findings"], "baseline should pin entries"
+    pinned = json.loads(bl.read_text())
+    assert pinned["format"] == 2 and pinned["sections"]["ast"], (
+        "baseline should pin entries in the ast section"
+    )
+
+
+def test_cli_strict_expired_scopes_to_own_section(tmp_path):
+    """A stale AST entry fails --strict-expired, but entries in the spmd
+    section are invisible to the ast gate (and survive --update-baseline)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f(x):\n    return x\n", encoding="utf-8")
+    bl = tmp_path / "bl.json"
+    stale_ast = {"rule": "TS01", "path": "gone.py", "context": "gone.f",
+                 "line": "assert x"}
+    spmd_entry = {"rule": "SP01", "path": "core.py",
+                  "context": "mesh1d/dense", "line": "return hist"}
+    bl.write_text(json.dumps(
+        {"format": 2, "sections": {"ast": [stale_ast], "spmd": [spmd_entry]}}
+    ), encoding="utf-8")
+    # lenient: expired ast debt is reported but passes
+    lenient = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "ast", str(clean),
+         "--baseline", str(bl)],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert lenient.returncode == 0, lenient.stdout + lenient.stderr
+    assert "expired" in lenient.stdout
+    assert "SP01" not in lenient.stdout  # the other section is not ours
+    # strict: the stale ast entry fails the run
+    strict = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "ast", str(clean),
+         "--baseline", str(bl), "--strict-expired"],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert strict.returncode == 1
+    # update retires ONLY the ast section; spmd debt survives verbatim
+    update = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "ast", str(clean),
+         "--baseline", str(bl), "--update-baseline"],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert update.returncode == 0
+    data = json.loads(bl.read_text())
+    assert data["sections"]["ast"] == []
+    assert data["sections"]["spmd"] == [spmd_entry]
 
 
 # ----------------------------------------------------------------------------
